@@ -1,0 +1,84 @@
+"""BlockSpec/VMEM design table for the Pallas kernels.
+
+The paper's register-tiling argument, one level up: BlockSpec shapes
+determine the VMEM working set each kernel *claims*, and the MXU wants
+its matmul dims in multiples of 128. This table enumerates the shipped
+block-shape choices per workload and reports:
+
+* VMEM bytes claimed (incl. 2x input double-buffering where streamed),
+* whether the MXU-facing dims are 128-aligned,
+* the kernel-level AI (FLOPs per HBM byte) at those blocks,
+* v5e roofline time and the bound (MXU vs HBM).
+
+Structural analysis from the lowering parameters — no TPU needed.
+"""
+from __future__ import annotations
+
+from repro.core import intensity as it
+from repro.kernels.dwconv2d import _block_c
+
+PEAK = 197e12
+HBM = 819e9
+VMEM = 16 * 2**20
+
+
+def dwconv2d_rows(layers) -> list[dict]:
+    rows = []
+    for l in layers:
+        ho = (l.h - l.hf) // l.stride + 1
+        wo = (l.w - l.hf) // l.stride + 1
+        cb = _block_c(l.h, l.w, ho, wo, l.c)
+        vmem = (2 * l.h * l.w + ho * wo) * cb * 4 + l.hf * l.hf * cb * 4
+        t = it.dwconv2d_traffic(1, l.h, l.w, l.c, l.hf, l.hf, l.stride)
+        tc, tm = t.time_s(PEAK, HBM)
+        rows.append({
+            "name": l.name,
+            "block_c": cb,
+            "lane_aligned": cb % 128 == 0 or cb == l.c,
+            "vmem_bytes": vmem,
+            "vmem_ok": vmem <= VMEM,
+            "ai_flops_per_byte": t.intensity,
+            "bound": "HBM" if tm > tc else "MXU",
+            "roofline_us": max(tc, tm) * 1e6,
+        })
+    return rows
+
+
+def pwconv_rows(layers, bg=256, bco=256, bci=256) -> list[dict]:
+    rows = []
+    for l in layers:
+        g = l.h * l.w
+        # acc f32 + 2x double-buffered A/B tiles (bf16-widths use 4 here: f32)
+        vmem = (bg * bco * 4) + 2 * (bg * bci + bci * bco) * 4
+        t = it.pwconv_traffic_rtrd(g, l.c_in, l.c_out, bg, bci, bco)
+        tc, tm = t.time_s(PEAK, HBM)
+        rows.append({
+            "name": l.name,
+            "blocks": f"{min(bg,g)}x{min(bco,l.c_out)}x{min(bci,l.c_in)}",
+            "mxu_aligned": (bco % 128 == 0 and bci % 128 == 0),
+            "vmem_bytes": vmem,
+            "vmem_ok": vmem <= VMEM,
+            "ai_flops_per_byte": t.intensity,
+            "bound": "HBM" if tm > tc else "MXU",
+            "roofline_us": max(tc, tm) * 1e6,
+        })
+    return rows
+
+
+def csv_rows() -> list[str]:
+    from benchmarks.layers import SUITES
+    out = []
+    dws, pws = SUITES["mobilenet_v1"]
+    for r in dwconv2d_rows(dws):
+        out.append(
+            f"vmem/dwconv2d/{r['name']},{r['roofline_us']:.1f},"
+            f"block_c={r['block_c']};vmem_KiB={r['vmem_bytes']//1024};"
+            f"fits={r['vmem_ok']};AI={r['ai_flops_per_byte']:.2f};"
+            f"bound={r['bound']}")
+    for r in pwconv_rows(pws):
+        out.append(
+            f"vmem/pwconv/{r['name']},{r['roofline_us']:.1f},"
+            f"blocks={r['blocks']};vmem_KiB={r['vmem_bytes']//1024};"
+            f"fits={r['vmem_ok']};mxu128={r['mxu_aligned']};"
+            f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
+    return out

@@ -1,0 +1,115 @@
+"""The paper's benchmark workloads: DWConv / PWConv layers extracted from
+MobileNetV1, MobileNetV2 and MnasNet-A1 (paper figs. 4-6).
+
+Shapes follow the architecture papers:
+* MobileNetV1 (arXiv:1704.04861, Table 1) — D1..D9 depthwise layers and the
+  pointwise layers that follow them.
+* MobileNetV2 (arXiv:1801.04381, Table 2) — depthwise stages of the inverted
+  residuals (expanded channels) and expand/project pointwise layers.
+* MnasNet-A1 (arXiv:1807.11626, Fig. 7) — includes 5x5 depthwise stages.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DWLayer:
+    name: str
+    h: int
+    w: int
+    c: int
+    hf: int
+    stride: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PWLayer:
+    name: str
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+
+
+MOBILENET_V1_DW = [
+    DWLayer("V1-D1", 112, 112, 32, 3, 1),
+    DWLayer("V1-D2", 112, 112, 64, 3, 2),
+    DWLayer("V1-D3", 56, 56, 128, 3, 1),
+    DWLayer("V1-D4", 56, 56, 128, 3, 2),
+    DWLayer("V1-D5", 28, 28, 256, 3, 1),
+    DWLayer("V1-D6", 28, 28, 256, 3, 2),
+    DWLayer("V1-D7", 14, 14, 512, 3, 1),
+    DWLayer("V1-D8", 14, 14, 512, 3, 2),
+    DWLayer("V1-D9", 7, 7, 1024, 3, 1),
+]
+
+MOBILENET_V1_PW = [
+    PWLayer("V1-P1", 112, 112, 32, 64),
+    PWLayer("V1-P2", 56, 56, 64, 128),
+    PWLayer("V1-P3", 56, 56, 128, 128),
+    PWLayer("V1-P4", 28, 28, 128, 256),
+    PWLayer("V1-P5", 28, 28, 256, 256),
+    PWLayer("V1-P6", 14, 14, 256, 512),
+    PWLayer("V1-P7", 14, 14, 512, 512),
+    PWLayer("V1-P8", 7, 7, 512, 1024),
+    PWLayer("V1-P9", 7, 7, 1024, 1024),
+]
+
+MOBILENET_V2_DW = [
+    DWLayer("V2-D1", 112, 112, 32, 3, 1),
+    DWLayer("V2-D2", 112, 112, 96, 3, 2),
+    DWLayer("V2-D3", 56, 56, 144, 3, 1),
+    DWLayer("V2-D4", 56, 56, 144, 3, 2),
+    DWLayer("V2-D5", 28, 28, 192, 3, 1),
+    DWLayer("V2-D6", 28, 28, 192, 3, 2),
+    DWLayer("V2-D7", 14, 14, 384, 3, 1),
+    DWLayer("V2-D8", 14, 14, 576, 3, 1),
+    DWLayer("V2-D9", 14, 14, 576, 3, 2),
+    DWLayer("V2-D10", 7, 7, 960, 3, 1),
+]
+
+MOBILENET_V2_PW = [
+    PWLayer("V2-P1", 112, 112, 32, 16),
+    PWLayer("V2-P2", 112, 112, 16, 96),
+    PWLayer("V2-P3", 56, 56, 96, 24),
+    PWLayer("V2-P4", 56, 56, 24, 144),
+    PWLayer("V2-P5", 28, 28, 144, 32),
+    PWLayer("V2-P6", 28, 28, 32, 192),
+    PWLayer("V2-P7", 14, 14, 192, 64),
+    PWLayer("V2-P8", 14, 14, 64, 384),
+    PWLayer("V2-P9", 14, 14, 96, 576),
+    PWLayer("V2-P10", 7, 7, 576, 160),
+    PWLayer("V2-P11", 7, 7, 160, 960),
+    PWLayer("V2-P12", 7, 7, 960, 320),
+]
+
+MNASNET_A1_DW = [
+    DWLayer("A1-D1", 112, 112, 32, 3, 1),
+    DWLayer("A1-D2", 112, 112, 96, 3, 2),
+    DWLayer("A1-D3", 56, 56, 144, 3, 1),
+    DWLayer("A1-D4", 56, 56, 144, 5, 2),      # 5x5 stage
+    DWLayer("A1-D5", 28, 28, 240, 5, 1),
+    DWLayer("A1-D6", 28, 28, 240, 3, 2),
+    DWLayer("A1-D7", 14, 14, 480, 3, 1),
+    DWLayer("A1-D8", 14, 14, 672, 5, 1),
+    DWLayer("A1-D9", 14, 14, 672, 5, 2),
+    DWLayer("A1-D10", 7, 7, 960, 5, 1),
+]
+
+MNASNET_A1_PW = [
+    PWLayer("A1-P1", 112, 112, 32, 16),
+    PWLayer("A1-P2", 56, 56, 96, 24),
+    PWLayer("A1-P3", 56, 56, 24, 144),
+    PWLayer("A1-P4", 28, 28, 144, 40),
+    PWLayer("A1-P5", 28, 28, 40, 240),
+    PWLayer("A1-P6", 14, 14, 240, 80),
+    PWLayer("A1-P7", 14, 14, 80, 480),
+    PWLayer("A1-P8", 14, 14, 672, 112),
+    PWLayer("A1-P9", 7, 7, 672, 160),
+    PWLayer("A1-P10", 7, 7, 960, 320),
+]
+
+SUITES = {
+    "mobilenet_v1": (MOBILENET_V1_DW, MOBILENET_V1_PW),
+    "mobilenet_v2": (MOBILENET_V2_DW, MOBILENET_V2_PW),
+    "mnasnet_a1": (MNASNET_A1_DW, MNASNET_A1_PW),
+}

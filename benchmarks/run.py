@@ -1,0 +1,65 @@
+"""Benchmark orchestrator. One section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+* figs 4-6 — per-layer DW/PW benchmarks (measured CPU wall time of the XLA
+  path + the paper's analytical AI model and modeled TPU-roofline speedup).
+* fig 7 — modeled core-scalability curves (channel- vs row-parallel).
+* fig 1 anchor — Algorithm-1 naive loops vs compiled (the paper's
+  "Unoptimized" point).
+* roofline — dominant-term summary per (arch x shape) from the dry-run
+  artifacts (if present; run ``python -m repro.launch.dryrun --all`` first).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from benchmarks.paper_figs import run_all
+    from benchmarks.roofline_table import csv_rows, load_records
+
+    results = run_all(quick=quick)
+    rows = []
+    for suite in ("mobilenet_v1", "mobilenet_v2", "mnasnet_a1"):
+        for r in results[suite]["dw"]:
+            rows.append(
+                f"dwconv/{suite}/{r['name']},{r['us_xla_cpu']:.1f},"
+                f"AI_ours={r['ai_ours']:.3f};AI_tflite={r['ai_tflite']:.3f};"
+                f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
+        for r in results[suite]["pw"]:
+            rows.append(
+                f"pwconv/{suite}/{r['name']},{r['us_xla_cpu']:.1f},"
+                f"AI_rtrd={r['ai_rtrd']:.3f};AI_rtra={r['ai_rtra']:.3f};"
+                f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
+    a = results["fig1_anchor"]
+    rows.append(f"fig1/{a['name']},{a['us_xla_cpu']:.1f},"
+                f"naive_loops_us={a['us_naive_loops']:.0f};"
+                f"speedup_vs_naive={a['speedup']:.0f}x")
+    for r in results["fig7"]:
+        rows.append(f"fig7/scaling/p{r['threads']},0.0,"
+                    f"speedup_ours={r['speedup_ours']:.2f};"
+                    f"speedup_rowpar={r['speedup_rowpar']:.2f}")
+
+    from benchmarks.kernel_vmem import csv_rows as vmem_rows
+    rows.extend(vmem_rows())
+
+    recs = load_records()
+    rows.extend(csv_rows(recs))
+
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row)
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench_results.json", "w") as f:
+        json.dump(results, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Core: the paper's DWConv/PWConv contributions as composable framework ops."""
+from repro.core.dwconv import (
+    depthwise1d_causal,
+    depthwise1d_step,
+    depthwise2d,
+    init_conv_state,
+)
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
+
+__all__ = [
+    "DEFAULT_POLICY",
+    "KernelPolicy",
+    "depthwise1d_causal",
+    "depthwise1d_step",
+    "depthwise2d",
+    "init_conv_state",
+    "pointwise",
+]

@@ -1,0 +1,164 @@
+"""Analytical arithmetic-intensity (AI) / operational-intensity (OI) models.
+
+Every equation in the paper, implemented exactly, plus the TPU translation.
+These are the quantitative claims the reproduction validates
+(tests/test_intensity.py) and the analytical layer the benchmark harness and
+EXPERIMENTS.md report from.
+
+Paper notation (fp32, 16-byte SIMD registers, FMA = 2 flops/lane · 4 lanes):
+
+* ``T_tf_dw``    — TF-Lite DWConv AI  (paper: 1/8, or < 1/6 with the
+                   benefit-of-the-doubt filter-in-register variant).
+* ``T_ours_dw``  — paper Alg. 4 DWConv AI, eq. (1); ≥ 9/22 for 3×3 filters.
+* ``T_rtra_pw``  — BLAS GEMM kernel (A-stationary) AI = 4/(3 + 8/Co).
+* ``T_rtrd_pw``  — paper Alg. 6 (output-stationary) AI = 2/(1 + 8/Ci).
+
+TPU translation: identical ratio structure with "bytes" = HBM↔VMEM traffic of
+one pallas_call and tile sizes = BlockSpec tiles. Reported per-layer by
+``benchmarks/``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+FMA_FLOPS_PER_LANE = 2  # multiply + add
+SIMD_LANES = 4          # 128-bit NEON / fp32
+SIMD_BYTES = 16
+
+
+# ---------------------------------------------------------------------------
+# Paper equations (ARM level)
+# ---------------------------------------------------------------------------
+
+def t_tf_dw(w_ob: int | None = None) -> float:
+    """TF-Lite DWConv AI. Plain: 1/8. With filter kept in registers across the
+    kk loop (benefit of the doubt): 1/((3 + 1/W_ob) * 2) < 1/6."""
+    if w_ob is None:
+        return (FMA_FLOPS_PER_LANE * SIMD_LANES) / (4 * SIMD_BYTES)  # = 1/8
+    return 1.0 / ((3.0 + 1.0 / w_ob) * 2.0)
+
+
+def t_ours_dw(hf: int, wf: int, h_ob: int, w_ob: int, ho: int, wo: int) -> float:
+    """Paper eq. (1): AI of Alg. 4.
+
+    W = H_ob*W_ob*Hf*Wf FMA ops -> 8W flops. Traffic: amortized filter load +
+    output load+store once + input stream (16 bytes per FMA).
+    """
+    w_work = h_ob * w_ob * hf * wf
+    filt = (hf * wf) / ((ho / h_ob) * (wo / w_ob))
+    out = h_ob * w_ob * 2
+    return (8.0 * w_work) / (16.0 * (filt + out + w_work))
+
+
+def t_ours_dw_asymptotic(hf: int, wf: int) -> float:
+    """Paper's simplification: T = Hf*Wf / ((2 + Hf*Wf) * 2)   (>= 9/22 for 3x3)."""
+    return (hf * wf) / ((2.0 + hf * wf) * 2.0)
+
+
+def t_rtra_pw(g_b: int = 8, ci_b: int = 8, co_b: int = 4, co: int = 1024) -> float:
+    """BLAS RTRA kernel AI (paper): D streamed twice per reduction block."""
+    flops = 2.0 * g_b * ci_b * co_b
+    bytes_ = (g_b * co_b * 2 + ci_b * co_b + (g_b * ci_b) / (co / co_b)) * 4.0
+    return flops / bytes_
+
+
+def t_rtrd_pw(g_b: int = 8, co_b: int = 8, ci_b: int = 4, ci: int = 1024) -> float:
+    """Paper RTRD kernel AI: D resident across the whole Ci reduction."""
+    flops = 2.0 * g_b * ci_b * co_b
+    bytes_ = (g_b * ci_b + ci_b * co_b + (g_b * co_b * 2) / (ci / ci_b)) * 4.0
+    return flops / bytes_
+
+
+# ---------------------------------------------------------------------------
+# TPU (VMEM-level) translation — same ratios, BlockSpec tiles, HBM traffic.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """FLOPs and HBM<->VMEM bytes of one kernel invocation."""
+    flops: float
+    bytes_hbm: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes_hbm, 1.0)
+
+    def time_s(self, peak_flops: float, hbm_bw: float) -> tuple[float, float]:
+        """(compute_s, memory_s) roofline terms for this kernel."""
+        return self.flops / peak_flops, self.bytes_hbm / hbm_bw
+
+
+def dwconv2d_traffic(
+    b: int, hi: int, wi: int, c: int, hf: int, wf: int, stride: int,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Our dwconv2d kernel: input read once, filter once, output stored once —
+    the information floor (paper's store-once / filter-stationary design)."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    flops = 2.0 * b * ho * wo * c * hf * wf
+    bytes_ = dtype_bytes * (b * hi * wi * c + hf * wf * c + b * ho * wo * c)
+    return Traffic(flops, bytes_)
+
+
+def dwconv2d_traffic_rowpar(
+    b: int, hi: int, wi: int, c: int, hf: int, wf: int, stride: int,
+    p: int, l1_bytes: int = 32 * 1024, dtype_bytes: int = 4,
+) -> Traffic:
+    """TF-Lite-style row-parallel partitioning at p cores: every core re-reads
+    the WHOLE filter (Hf*Wf*C) and halo rows; models the paper's core-
+    inscalability argument for the fig-7 scalability benchmark."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    flops = 2.0 * b * ho * wo * c * hf * wf
+    halo_rows = (hf - stride) if hf > stride else 0
+    bytes_ = dtype_bytes * (
+        b * hi * wi * c                      # input
+        + b * p * halo_rows * wi * c         # halo re-reads at p chunk seams
+        + p * hf * wf * c                    # filter replicated in every L1
+        + b * ho * wo * c                    # output
+    )
+    # L1 thrash: when a core's filter + filter-support rows exceed its L1,
+    # filter and input rows evict each other, so the filter is re-fetched per
+    # output row and each input row is touched once per filter row instead of
+    # once (the paper's "cache misses fly high" regime; worsens with p since
+    # all cores hold the FULL filter).
+    ws = (hf * wf * c + hf * wi * c) * dtype_bytes
+    if ws > l1_bytes:
+        bytes_ += dtype_bytes * b * (ho - 1) * hf * wf * c
+        bytes_ += dtype_bytes * b * hi * wi * c * (hf - 1)
+    return Traffic(flops, bytes_)
+
+
+def pwconv_traffic_rtrd(
+    g: int, ci: int, co: int, bg: int, bci: int, bco: int,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Our output-stationary GEMM: A re-read per Co panel, B re-read per G
+    panel, D written once (never re-read)."""
+    flops = 2.0 * g * ci * co
+    n_jpanels = math.ceil(co / bco)
+    n_gpanels = math.ceil(g / bg)
+    bytes_ = dtype_bytes * (
+        g * ci * n_jpanels      # A streamed once per output column panel
+        + ci * co * n_gpanels   # B streamed once per output row panel
+        + g * co                # D stored once  <- the RTRD win
+    )
+    return Traffic(flops, bytes_)
+
+
+def pwconv_traffic_rtra(
+    g: int, ci: int, co: int, bg: int, bci: int, bco: int,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """A-stationary GEMM (BLAS/RTRA): D round-trips once per Ci block."""
+    flops = 2.0 * g * ci * co
+    n_kpanels = math.ceil(ci / bci)
+    n_gpanels = math.ceil(g / bg)
+    bytes_ = dtype_bytes * (
+        g * ci                      # A streamed once (stationary per panel)
+        + ci * co * n_gpanels       # B streamed per row panel
+        + g * co * 2 * n_kpanels    # D loaded+stored per reduction block
+    )
+    return Traffic(flops, bytes_)

@@ -1,0 +1,57 @@
+"""PWConv — the paper's pointwise-convolution contribution as a framework op.
+
+Every dense projection in the framework (attention QKV/O, MLP, MoE experts,
+router, unembed) routes through :func:`pointwise`, so the paper's
+output-stationary GEMM is a first-class, globally selectable feature
+(``KernelPolicy``), not a benchmark-only artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Global execution policy for the paper's ops.
+
+    impl: "auto" | "xla" | "pallas". interpret=True only for CPU validation.
+    """
+    impl: str = "auto"
+    interpret: bool = False
+    block_g: int = 256
+    block_co: int = 256
+    block_ci: int = 256
+
+    def resolved(self) -> str:
+        return (
+            "pallas" if self.impl == "auto" and jax.default_backend() == "tpu"
+            else ("xla" if self.impl == "auto" else self.impl)
+        )
+
+
+DEFAULT_POLICY = KernelPolicy()
+
+
+def pointwise(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Pointwise conv (1x1) / GEMM over the trailing axis, fp32 accumulate."""
+    return ops.pwconv(
+        x, w, bias,
+        activation=activation,
+        impl=policy.impl,
+        interpret=policy.interpret,
+        block_g=policy.block_g,
+        block_co=policy.block_co,
+        block_ci=policy.block_ci,
+    )

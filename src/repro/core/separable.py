@@ -1,0 +1,76 @@
+"""Depthwise-separable convolution blocks — the paper's own workload.
+
+MobileNetV1 blocks (DW 3x3 + folded-BN + ReLU6, then PW + ReLU6) and the
+MobileNetV2 inverted residual (PW-expand + DW + PW-project), built entirely
+from the paper's two ops. BatchNorm is folded into the filters/bias
+(inference form), as in the paper's measured binaries.
+
+Used by examples/mobilenet_inference.py and benchmarks/ (figs. 4-6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dwconv import depthwise2d
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
+
+
+def init_separable(key, c_in: int, c_out: int, hf: int = 3, wf: int = 3):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_dw = 1.0 / jnp.sqrt(hf * wf)
+    scale_pw = 1.0 / jnp.sqrt(c_in)
+    return {
+        "dw_filter": jax.random.normal(k1, (hf, wf, c_in)) * scale_dw,
+        "dw_bias": jnp.zeros((c_in,)),
+        "pw_weight": jax.random.normal(k2, (c_in, c_out)) * scale_pw,
+        "pw_bias": jnp.zeros((c_out,)),
+    }
+
+
+def separable_block(
+    params,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    activation: str = "relu6",
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """MobileNetV1 depthwise-separable block (inference, BN folded)."""
+    y = depthwise2d(x, params["dw_filter"], stride=stride, policy=policy)
+    y = y + params["dw_bias"]
+    y = jnp.clip(y, 0.0, 6.0) if activation == "relu6" else jax.nn.relu(y)
+    return pointwise(
+        y, params["pw_weight"], params["pw_bias"],
+        activation=activation, policy=policy,
+    )
+
+
+def init_inverted_residual(key, c_in: int, c_out: int, expand: int = 6,
+                           hf: int = 3):
+    k1, k2, k3 = jax.random.split(key, 3)
+    c_mid = c_in * expand
+    return {
+        "expand_w": jax.random.normal(k1, (c_in, c_mid)) / jnp.sqrt(c_in),
+        "dw_filter": jax.random.normal(k2, (hf, hf, c_mid)) / hf,
+        "project_w": jax.random.normal(k3, (c_mid, c_out)) / jnp.sqrt(c_mid),
+    }
+
+
+def inverted_residual(
+    params,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """MobileNetV2 inverted-residual block (PW-expand -> DW -> PW-project)."""
+    y = pointwise(x, params["expand_w"], activation="relu6", policy=policy)
+    y = depthwise2d(y, params["dw_filter"], stride=stride, policy=policy)
+    y = jnp.clip(y, 0.0, 6.0)
+    y = pointwise(y, params["project_w"], policy=policy)
+    if stride == 1 and x.shape[-1] == y.shape[-1]:
+        y = y + x
+    return y

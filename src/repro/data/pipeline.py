@@ -1,0 +1,120 @@
+"""Deterministic, resumable, shard-disjoint synthetic LM data pipeline.
+
+Production posture without shipping a corpus: a seeded counter-based stream
+(threefry on (seed, step, shard)) generates token batches with a Zipfian
+marginal + a deterministic n-gram structure so models actually have signal
+to fit (loss decreases — used by integration tests and examples).
+
+* determinism: batch(step) is a pure function of (seed, step) — replaying a
+  step after restore is bit-exact (checkpoint stores only `step`).
+* sharding: each data-parallel rank draws a disjoint slice of the global
+  batch (host-sharded loading at scale).
+* prefetch: a background thread keeps `prefetch` batches ready.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    structure: int = 8     # n-gram period giving learnable structure
+
+
+def _batch_np(cfg: DataConfig, step: int, shard: int = 0,
+              n_shards: int = 1) -> dict:
+    """Pure function of (cfg.seed, step, shard)."""
+    assert cfg.global_batch % n_shards == 0
+    b_local = cfg.global_batch // n_shards
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, shard])
+    )
+    # Zipf marginal clipped to vocab
+    raw = rng.zipf(cfg.zipf_a, size=(b_local, cfg.seq_len + 1))
+    toks = (raw - 1) % cfg.vocab_size
+    # learnable structure: every `structure`-th token repeats (shifted) the
+    # anchor token, so context predicts it
+    anchor = toks[:, 0::cfg.structure]
+    for j in range(1, cfg.structure // 2 + 1):
+        idx = np.arange(j, cfg.seq_len + 1, cfg.structure)
+        toks[:, idx] = (anchor[:, : len(idx)] + j) % cfg.vocab_size
+    tokens = toks[:, :-1].astype(np.int32)
+    labels = toks[:, 1:].astype(np.int32)
+    return {"tokens": tokens, "labels": labels}
+
+
+class DataIterator:
+    """Stateful iterator with save/restore; optional background prefetch."""
+
+    def __init__(self, cfg: DataConfig, *, shard: int = 0, n_shards: int = 1,
+                 start_step: int = 0, prefetch: int = 2):
+        self.cfg = cfg
+        self.shard = shard
+        self.n_shards = n_shards
+        self.step = start_step
+        self._prefetch_n = prefetch
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        if prefetch > 0:
+            self._start_prefetch()
+
+    # -- checkpointable state ------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step, "shard": self.shard,
+                "n_shards": self.n_shards}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: dict, prefetch: int = 2):
+        return cls(cfg, shard=state["shard"], n_shards=state["n_shards"],
+                   start_step=state["step"], prefetch=prefetch)
+
+    # -- iteration -------------------------------------------------------------
+    def _start_prefetch(self):
+        self._q = queue.Queue(maxsize=self._prefetch_n)
+        self._stop = threading.Event()
+        fetch_from = self.step
+
+        def worker():
+            s = fetch_from
+            while not self._stop.is_set():
+                batch = _batch_np(self.cfg, s, self.shard, self.n_shards)
+                try:
+                    self._q.put((s, batch), timeout=0.5)
+                    s += 1
+                except queue.Full:
+                    continue
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def __next__(self) -> dict:
+        if self._q is not None:
+            s, batch = self._q.get()
+            # on restore mid-stream the queue may hold stale steps; skip
+            while s < self.step:
+                s, batch = self._q.get()
+            self.step = s + 1
+            return batch
+        batch = _batch_np(self.cfg, self.step, self.shard, self.n_shards)
+        self.step += 1
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def close(self):
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=2)

@@ -1,0 +1,130 @@
+"""Depthwise 2-D convolution Pallas kernel (paper Alg. 4, TPU adaptation).
+
+Paper mechanism → TPU mapping (DESIGN.md §2):
+
+* channel-outermost parallel loop (``i'``)  → grid over channel blocks, with
+  ``dimension_semantics="parallel"`` — each TensorCore owns a channel slab, so
+  its filter working set is ``Hf·Wf·Cblk`` (the 1/p scalability argument).
+* filter register tile pinned across all output blocks → the ``(Hf, Wf, Cblk)``
+  filter tile is fetched to VMEM once per grid cell and reused for the whole
+  spatial extent.
+* output block loaded/stored once (Alg. 4 lines 14-19 / 29-34) → the output
+  tile is accumulated in a VMEM fp32 buffer and written to HBM exactly once.
+* the 4-channel NEON SIMD dimension → the 128-lane minor dimension (NHWC).
+
+DWConv has no matmul structure, so this is a pure-VPU kernel: an unrolled
+``Hf×Wf`` shift-and-FMA over the spatial extent, vectorized across lanes
+(channels) and sublanes (rows). HBM traffic is the information floor: input
+read once, filter once, output written once — AI = Hf·Wf/(1+1/…) FLOPs/byte,
+the paper's T^DW bound with the block terms at their VMEM-scale limits.
+
+Stride > 1 is handled with static strided slices on the H/W (non-minor) dims.
+Padding is applied by the wrapper (ops.py) so the kernel sees VALID geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
+                 out_dtype):
+    """Blocks: x (1, Hi, Wi, Cb); f (Hf, Wf, Cb); out (1, Ho, Wo, Cb)."""
+    _, ho, wo, _ = out_ref.shape
+    x = x_ref[0].astype(jnp.float32)           # (Hi, Wi, Cb) — read once
+    f = f_ref[...].astype(jnp.float32)         # filter tile: VMEM-resident
+    acc = jnp.zeros(out_ref.shape[1:], jnp.float32)
+    s = stride
+    for n in range(hf):                        # unrolled taps (Hf·Wf ≤ 25)
+        for m in range(wf):
+            # strided window of the input block for tap (n, m):
+            win = jax.lax.slice(
+                x,
+                (n, m, 0),
+                (n + (ho - 1) * s + 1, m + (wo - 1) * s + 1, x.shape[2]),
+                (s, s, 1),
+            )
+            acc = acc + win * f[n, m][None, None, :]
+    out_ref[0] = acc.astype(out_dtype)         # single store (lines 29-34)
+
+
+def _block_c(hi: int, wi: int, ho: int, wo: int, c: int,
+             vmem_budget: int = 12 * 1024 * 1024) -> int:
+    """Largest channel block (multiple of 128, or c) fitting the VMEM budget.
+
+    Working set per channel block: input + output fp32 + filter (negligible),
+    with 2x for double buffering of the input stream.
+    """
+    per_c = (2 * hi * wi + ho * wo) * 4
+    cb = max(1, vmem_budget // max(per_c, 1))
+    if c <= cb:
+        return c
+    if cb >= 128:
+        return (cb // 128) * 128
+    # tiny-VMEM fallback: power-of-two lanes (correct everywhere; only lane
+    # utilization suffers — noted in DESIGN.md §2)
+    p = 1
+    while p * 2 <= cb:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret", "block_c"))
+def dwconv2d_pallas(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    block_c: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (B, Hi, Wi, C); f: (Hf, Wf, C) -> (B, Ho, Wo, C). VALID geometry."""
+    b, hi, wi, c = x.shape
+    hf, wf, cf = f.shape
+    assert c == cf, (x.shape, f.shape)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    assert ho >= 1 and wo >= 1, "input smaller than filter"
+
+    cb = block_c or _block_c(hi, wi, ho, wo, c)
+    pad = (-c) % cb
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        f = jnp.pad(f, ((0, 0), (0, 0), (0, pad)))
+    cp = c + pad
+
+    # Input rows/cols actually consumed (drop the VALID remainder so block
+    # shapes match exactly).
+    hiu = (ho - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    x = x[:, :hiu, :wiu, :]
+
+    kernel = functools.partial(
+        _dw2d_kernel, hf=hf, wf=wf, stride=stride, out_dtype=x.dtype
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        )
+    except AttributeError:
+        compiler_params = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, cp // cb),
+        in_specs=[
+            pl.BlockSpec((1, hiu, wiu, cb), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((hf, wf, cb), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cb), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cp), x.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(x, f)
+    return out[..., :c]

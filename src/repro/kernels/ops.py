@@ -1,0 +1,106 @@
+"""Jitted public wrappers for the kernel package.
+
+Every op has two execution paths:
+
+* ``impl="xla"``      — the pure-jnp oracle (ref.py), used on CPU hosts and as
+                        the comparison baseline;
+* ``impl="pallas"``   — the TPU Pallas kernel (compiled on TPU, or
+                        ``interpret=True`` on CPU for validation).
+
+``impl="auto"`` picks pallas on TPU backends and xla elsewhere, so the same
+model code runs in this CPU container and on a real pod.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dwconv1d import dwconv1d_causal_pallas
+from repro.kernels.dwconv2d import dwconv2d_pallas
+from repro.kernels.pwconv import pwconv_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def _pad_same(x: jax.Array, hf: int, wf: int, stride: int) -> jax.Array:
+    """Explicit SAME padding (so the Pallas kernel only sees VALID)."""
+    _, hi, wi, _ = x.shape
+    ho = -(-hi // stride)
+    wo = -(-wi // stride)
+    ph = max((ho - 1) * stride + hf - hi, 0)
+    pw = max((wo - 1) * stride + wf - wi, 0)
+    return jnp.pad(
+        x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0))
+    )
+
+
+def dwconv2d(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "same",
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Depthwise 2-D conv, NHWC. x (B,Hi,Wi,C), f (Hf,Wf,C)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.dwconv2d_ref(x, f, stride=stride, padding=padding)
+    if padding.lower() == "same":
+        x = _pad_same(x, f.shape[0], f.shape[1], stride)
+    elif padding.lower() != "valid":
+        raise ValueError(padding)
+    return dwconv2d_pallas(x, f, stride=stride, interpret=interpret)
+
+
+def dwconv1d_causal(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+    block_l: int = 1024,
+    block_d: int = 256,
+) -> jax.Array:
+    """Causal depthwise 1-D conv. x (B,L,D), f (K,D)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.dwconv1d_causal_ref(x, f)
+    return dwconv1d_causal_pallas(
+        x, f, block_l=block_l, block_d=block_d, interpret=interpret
+    )
+
+
+def pwconv(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    impl: str = "auto",
+    interpret: bool = False,
+    block_g: int = 256,
+    block_co: int = 256,
+    block_ci: int = 256,
+) -> jax.Array:
+    """Pointwise conv / GEMM over the last axis. x (..., Ci), w (Ci, Co)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.pwconv_ref(x, w, bias=bias, activation=activation)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = pwconv_pallas(
+        x2, w, bias,
+        activation=activation,
+        block_g=block_g, block_co=block_co, block_ci=block_ci,
+        interpret=interpret,
+    )
+    return y.reshape(*lead, w.shape[1])

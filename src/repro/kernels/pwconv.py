@@ -1,0 +1,154 @@
+"""Output-stationary pointwise-conv / GEMM Pallas kernel (paper Alg. 6, RTRD).
+
+The paper's PWConv contribution: make the GEMM kernel *output-stationary* —
+the output tile ``D`` stays in fast storage across the entire reduction (Ci)
+loop and is stored exactly once, instead of the BLAS/RTRA pattern where ``D``
+round-trips per reduction block.
+
+TPU adaptation (DESIGN.md §2): "registers" become a VMEM-resident fp32
+accumulator tile. The Pallas grid is ``(G/Gb, Co/Cob, Ci/Cib)`` with the
+reduction axis **innermost** and the output BlockSpec index map ignoring it,
+so the accumulator tile is revisited across all Ci steps and written back to
+HBM once — RTRD at the VMEM level. The RTRA pathology (reduction outermost)
+would spill/refetch the accumulator tile to HBM ``Ci/Cib`` times.
+
+Epilogue fusion (bias + activation) is a beyond-paper addition: it removes an
+extra HBM round-trip of the output that a separate bias/act op would cost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _epilogue(acc, bias_blk, activation):
+    if bias_blk is not None:
+        acc = acc + bias_blk.astype(acc.dtype)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "relu6":
+        acc = jnp.clip(acc, 0.0, 6.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation == "silu":
+        acc = jax.nn.silu(acc)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc
+
+
+def _rtrd_kernel(*refs, nk: int, activation, out_dtype):
+    """Grid (g, j, k); k innermost. acc_ref: VMEM (Gb, Cob) fp32 scratch.
+
+    refs = (x_ref, w_ref, [bias_ref,] out_ref, acc_ref).
+    """
+    if len(refs) == 5:
+        x_ref, w_ref, bias_ref, out_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, out_ref, acc_ref = refs
+        bias_ref = None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The output tile (acc) stays resident; only A/B tiles stream. == RTRD.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():  # single store of the output tile (paper lines 29-34)
+        acc = acc_ref[...]
+        acc = _epilogue(acc, bias_ref[...] if bias_ref is not None else None,
+                        activation)
+        out_ref[...] = acc.astype(out_dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "activation", "block_g", "block_co", "block_ci", "interpret",
+    ),
+)
+def pwconv_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    block_g: int = 256,
+    block_co: int = 256,
+    block_ci: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (G, Ci) @ w: (Ci, Co) [+ bias (Co,)] -> (G, Co), fp32 accumulate.
+
+    Block sizes are multiples of the (8, 128) fp32 tile; defaults sized so
+    x/w/acc tiles (3 * 256*256*4B = 768 KiB) leave VMEM room for
+    double-buffering the streamed A/B tiles.
+    """
+    g, ci = x.shape
+    ci2, co = w.shape
+    assert ci == ci2, (x.shape, w.shape)
+    out_dtype = x.dtype
+
+    bg = min(block_g, max(8, g))
+    bco = min(block_co, max(128, co))
+    bci = min(block_ci, max(128, ci))
+
+    xp = _pad_to(_pad_to(x, 0, bg), 1, bci)
+    wp = _pad_to(_pad_to(w, 0, bci), 1, bco)
+    gp, cip = xp.shape
+    cop = wp.shape[1]
+    nk = cip // bci
+
+    in_specs = [
+        pl.BlockSpec((bg, bci), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bci, bco), lambda i, j, k: (k, j)),
+    ]
+    inputs = [xp, wp]
+    if bias is not None:
+        bp = _pad_to(bias.reshape(1, -1), 1, bco)
+        in_specs.append(pl.BlockSpec((1, bco), lambda i, j, k: (0, j)))
+        inputs.append(bp)
+
+    kernel = functools.partial(
+        _rtrd_kernel, nk=nk, activation=activation, out_dtype=out_dtype
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except AttributeError:  # older naming
+        compiler_params = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(gp // bg, cop // bco, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bg, bco), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gp, cop), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bg, bco), jnp.float32)],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(*inputs)
+    return out[:g, :co]

@@ -1,0 +1,192 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against, and
+the XLA fallback path used on hosts without a TPU (this container). They are
+written for clarity, not speed; the jitted dispatch in :mod:`repro.kernels.ops`
+picks between these and the Pallas implementations.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Depthwise 2-D convolution (paper Alg. 1/4), NHWC, filter (Hf, Wf, C).
+# ---------------------------------------------------------------------------
+
+
+def dwconv2d_ref(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "valid",
+) -> jax.Array:
+    """Depthwise conv. x: (B, Hi, Wi, C); f: (Hf, Wf, C) -> (B, Ho, Wo, C)."""
+    assert x.ndim == 4 and f.ndim == 3 and x.shape[-1] == f.shape[-1]
+    c = x.shape[-1]
+    # lax depthwise: rhs (Hf, Wf, 1, C) with feature_group_count=C, NHWC/HWIO/NHWC.
+    rhs = f[:, :, None, :]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out.astype(x.dtype)
+
+
+def dwconv2d_loops_ref(
+    x: np.ndarray, f: np.ndarray, *, stride: int = 1
+) -> np.ndarray:
+    """Paper Alg. 1 (unoptimized 5-nested-loop MAC), VALID padding, numpy.
+
+    Deliberately literal — used to cross-check the lax oracle itself.
+    """
+    b, hi, wi, c = x.shape
+    hf, wf, _ = f.shape
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    out = np.zeros((b, ho, wo, c), dtype=np.float64)
+    for bb in range(b):
+        for l in range(ho):
+            for k in range(wo):
+                for i in range(c):
+                    for n in range(hf):
+                        for m in range(wf):
+                            out[bb, l, k, i] += (
+                                x[bb, l * stride + n, k * stride + m, i] * f[n, m, i]
+                            )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal 1-D convolution (SSM/Mamba conv preactivation).
+# ---------------------------------------------------------------------------
+
+
+def dwconv1d_causal_ref(x: jax.Array, f: jax.Array) -> jax.Array:
+    """Causal depthwise conv. x: (B, L, D); f: (K, D) -> (B, L, D).
+
+    out[b, l, d] = sum_k x[b, l - (K-1) + k, d] * f[k, d]  (zero left-pad).
+    """
+    assert x.ndim == 3 and f.ndim == 2 and x.shape[-1] == f.shape[-1]
+    k = f.shape[0]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(k):  # K is tiny (3..5) and static — unrolled shifts.
+        out = out + xp[:, i : i + x.shape[1], :] * f[i][None, None, :].astype(
+            jnp.float32
+        )
+    return out.astype(x.dtype)
+
+
+def dwconv1d_step_ref(
+    state: jax.Array, x_t: jax.Array, f: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step. state: (B, K-1, D) past inputs; x_t: (B, D).
+
+    Returns (new_state, y_t) with y_t = causal conv output at this position.
+    """
+    k = f.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, D)
+    y = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32), f.astype(jnp.float32))
+    return window[:, 1:, :] if k > 1 else state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise convolution == GEMM (paper Alg. 3/5/6).
+# ---------------------------------------------------------------------------
+
+
+def _epilogue(y: jax.Array, bias: Optional[jax.Array], activation: Optional[str]):
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation is None:
+        return y
+    if activation == "relu":
+        return jax.nn.relu(y)
+    if activation == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+@jax.custom_vjp
+def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _mm_fwd(x, w):
+    return _mm(x, w), (x, w)
+
+
+def _mm_bwd(res, g):
+    """Grads cast to the *param dtype before* any cross-device reduction:
+    with bf16 weights the partial-dW all-reduce/reduce-scatter moves half
+    the bytes (Megatron-style bf16 gradient reduction). Microbatch
+    accumulation upstream still sums in fp32."""
+    x, w = res
+    dx = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    ci = x.shape[-1]
+    x2 = x.reshape(-1, ci)
+    g2 = g.reshape(-1, g.shape[-1])
+    dw = jnp.dot(x2.T, g2, preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+def pwconv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Pointwise conv / GEMM. x: (..., Ci); w: (Ci, Co) -> (..., Co).
+
+    fp32 accumulation regardless of input dtype (matches MXU semantics);
+    backward reduces gradients in the param dtype (see _mm_bwd).
+    """
+    y = _mm(x, w)
+    y = _epilogue(y, bias, activation)
+    return y.astype(x.dtype)
+
+
+def matmul_rtra_ref(
+    a: jax.Array, b: jax.Array, *, block_k: int = 128
+) -> jax.Array:
+    """Paper Alg. 5 loop structure (A-stationary, k-outermost): the BLAS/RTRA
+    baseline. Semantically identical to ``a @ b``; the loop embodies the
+    output-tile round-trip per reduction block that the paper identifies as
+    the AI flaw of BLAS kernels. Used for traffic modeling + as a second oracle.
+    """
+    g, ci = a.shape
+    ci2, co = b.shape
+    assert ci == ci2
+    nk = max(1, (ci + block_k - 1) // block_k)
+    pad = nk * block_k - ci
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    a3 = a.reshape(g, nk, block_k).transpose(1, 0, 2)  # (nk, G, bk)
+    b3 = b.reshape(nk, block_k, co)
+
+    def body(k, acc):  # out tile is re-read and re-written every k step (RTRA)
+        return acc + jnp.dot(
+            a3[k], b3[k], preferred_element_type=jnp.float32
+        )
+
+    out = jax.lax.fori_loop(0, nk, body, jnp.zeros((g, co), jnp.float32))
+    return out.astype(a.dtype)

@@ -1,0 +1,413 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16,16) or (2,16,16),
+  2. builds sharding specs for the train state / serve cache and inputs,
+  3. ``jax.jit(step, in_shardings=..., out_shardings=..., donate...)``
+     ``.lower(*ShapeDtypeStructs).compile()``,
+  4. prints memory_analysis / cost_analysis and writes a JSON artifact with
+     the three roofline terms (repro.roofline.analysis).
+
+Shape cells marked inapplicable (long_500k on full-attention archs) are
+recorded as skipped with the DESIGN.md rationale.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, input_specs, shape_skip_reason
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis
+from repro.sharding.rules import (
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    param_specs,
+    use_rules,
+    zero1_specs,
+)
+
+
+def make_rules(mesh, *, mode: str, multi_pod: bool,
+               seq_parallel: bool = False,
+               serve_weight_fsdp: bool = False) -> ShardingRules:
+    """serve_weight_fsdp: 2-D weight sharding even at serve time, for models
+    whose TP-16 shard alone exceeds HBM (e.g. 110B dense on v5e)."""
+    fsdp = "data" if (mode == "train" or serve_weight_fsdp) else None
+    return ShardingRules(
+        mesh=mesh,
+        batch_axes=("pod", "data") if multi_pod else ("data",),
+        model_axis="model",
+        fsdp_axis=fsdp,
+        seq_axis="model" if seq_parallel else None,
+        expert_fsdp_axis="data",   # experts always need the extra axis
+    )
+
+
+def pick_microbatches(cfg, shape_meta, rules) -> int:
+    """Heuristic: bound per-device tokens per microbatch so layer-stash
+    activations and MoE dispatch buffers fit HBM (baseline; tuned in §Perf)."""
+    if shape_meta["kind"] != "train":
+        return 1
+    dp = 1
+    for a in rules.batch_axes:
+        dp *= rules.mesh.shape[a]
+    b, s = shape_meta["global_batch"], shape_meta["seq_len"]
+    tokens_local = b // dp * s
+    if cfg.moe is not None:
+        budget = 4096       # bounds EP dispatch buffers (~tokens*topk*d)
+    elif cfg.d_model >= 3072:
+        budget = 8192
+    else:
+        budget = 16384
+    mb = max(1, tokens_local // budget)
+    # microbatch count must divide the local batch rows
+    while (b // dp) % mb != 0:
+        mb -= 1
+    return mb
+
+
+def lower_group_program(cfg, meta, rules, mesh, *, microbatches: int = 1):
+    """Lower ONE layer group (no outer scans) for per-layer cost accounting
+    (analysis.analyze combines it with the full program; see its docstring).
+
+    Returns (compiled, trips)."""
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    from repro.serve import serve_step as S
+    from repro.sharding.rules import shard_act
+
+    pattern = T.layer_pattern(cfg)
+    if cfg.encdec is not None:
+        pattern = [T.LayerVariant(kind="dec")]
+    groups = cfg.n_layers // len(pattern)
+    params_shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    strip = lambda t: jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), t)
+    group_shapes = {f"blocks_v{vi}": strip(params_shapes[f"blocks_v{vi}"])
+                    for vi in range(len(pattern))}
+    gspecs = named(mesh, param_specs(group_shapes, rules))
+
+    b, s = meta["global_batch"], meta["seq_len"]
+    kind = meta["kind"]
+    act = cfg.jax_dtype
+    if kind == "train":
+        b = max(b // microbatches, 1)
+        trips = groups * microbatches
+    else:
+        trips = groups
+    enc_kv = None
+
+    if kind == "decode":
+        x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), act)
+        prefix = cfg.meta_tokens + cfg.fusion_tokens
+        cache_full = S.cache_specs(cfg, b, s + prefix)
+        cg = {f"v{vi}": strip(cache_full[f"v{vi}"])
+              for vi in range(len(pattern))}
+        if cfg.encdec is not None:
+            cg["enc"] = {"enc_k": strip(cache_full["enc_k"]),
+                         "enc_v": strip(cache_full["enc_v"])}
+        cg_specs = named(mesh, cache_pspecs(cg, rules, stacked=False))
+        pos_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+        def gfn(p_group, c_group, x, pos):
+            enc_kv = None
+            if cfg.encdec is not None:
+                enc_kv = (c_group["enc"]["enc_k"], c_group["enc"]["enc_v"])
+            new_c = {}
+            for vi, variant in enumerate(pattern):
+                x, new_c[f"v{vi}"] = T.layer_decode(
+                    p_group[f"blocks_v{vi}"], x, c_group[f"v{vi}"], pos,
+                    cfg, variant, enc_kv=enc_kv)
+            return x, new_c
+
+        # pin the cache OUTPUT sharding — otherwise XLA may choose a
+        # replicated output and all-gather the whole updated cache
+        out_cache_specs = named(mesh, cache_pspecs(
+            {k: v for k, v in cg.items() if k != "enc"}, rules,
+            stacked=False))
+        jitted = jax.jit(gfn, in_shardings=(
+            gspecs, cg_specs,
+            named(mesh, batch_pspecs(x_sds, rules)),
+            named(mesh, batch_pspecs(pos_sds, rules))),
+            out_shardings=(named(mesh, batch_pspecs(x_sds, rules)),
+                           out_cache_specs),
+            donate_argnums=(1,))
+        return jitted.lower(group_shapes, cg, x_sds, pos_sds).compile(), trips
+
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), act)
+    pos_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    x_spec = named(mesh, batch_pspecs(x_sds, rules))
+    pos_spec = named(mesh, batch_pspecs(pos_sds, rules))
+
+    def fwd(p_group, x, positions):
+        x = shard_act(x, "btd")
+        for vi, variant in enumerate(pattern):
+            def blk(x, p_layer=p_group[f"blocks_v{vi}"], variant=variant):
+                y, _ = T.layer_forward(p_layer, x, cfg, variant,
+                                       positions=positions)
+                return y
+            x = (jax.checkpoint(blk)(x) if cfg.remat == "block"
+                 else blk(x))
+            x = shard_act(x, "btd")
+        return x
+
+    if kind == "train":
+        def gfn(p_group, x, positions):
+            def loss(p, x):
+                return jnp.sum(jnp.square(
+                    fwd(p, x, positions).astype(jnp.float32)))
+            l, (gp, gx) = jax.value_and_grad(loss, argnums=(0, 1))(p_group, x)
+            return l, gp, gx
+
+        # dW must come out SHARDED like the weights (as in the real
+        # train_step, where it feeds the sharded optimizer state) — without
+        # this XLA all-reduces dW to replicated and wildly overstates the
+        # per-layer collective bytes.
+        jitted = jax.jit(
+            gfn, in_shardings=(gspecs, x_spec, pos_spec),
+            out_shardings=(jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()), gspecs, x_spec))
+    else:  # prefill
+        def gfn(p_group, x, positions):
+            return fwd(p_group, x, positions)
+
+        jitted = jax.jit(gfn, in_shardings=(gspecs, x_spec, pos_spec),
+                         out_shardings=x_spec)
+    return jitted.lower(group_shapes, x_sds, pos_sds).compile(), trips
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               microbatches: int | None = None, seq_parallel: bool | None = None,
+               donate: bool = True, extra_cfg=None, no_fsdp: bool = False,
+               pure_dp: bool = False):
+    """Returns (compiled, record_stub) or raises."""
+    cfg = extra_cfg or get_config(arch)
+    meta = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = "train" if meta["kind"] == "train" else "serve"
+    big = cfg.moe is not None or cfg.d_model >= 8192
+    if seq_parallel is None:
+        # sequence-parallel activations: always for 32k prefill; for train
+        # on MoE / d>=8k archs (bounds the per-layer remat stash)
+        seq_parallel = meta["kind"] == "prefill" or (
+            meta["kind"] == "train" and big)
+    if meta["kind"] == "train" and cfg.moe is not None and extra_cfg is None:
+        import dataclasses as dc
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=1.5))
+    # dense models whose bf16 TP-16 shard alone exceeds ~half of v5e HBM
+    # get 2-D weight sharding at serve time too
+    serve_weight_fsdp = cfg.n_params() * 2 / 16 > 8e9
+    rules = make_rules(mesh, mode=mode, multi_pod=multi_pod,
+                       seq_parallel=seq_parallel,
+                       serve_weight_fsdp=serve_weight_fsdp)
+    if no_fsdp:  # pure DP+TP (small models: weights replicated over data)
+        import dataclasses as dc
+        rules = dc.replace(rules, fsdp_axis=None, expert_fsdp_axis=None)
+    if pure_dp:  # fold the model axis into data parallelism (TP degree 1)
+        import dataclasses as dc
+        rules = dc.replace(
+            rules, model_axis=None, fsdp_axis=None, expert_fsdp_axis=None,
+            seq_axis=None,
+            batch_axes=tuple(rules.batch_axes) + ("model",))
+
+    from repro.models import transformer as T
+    from repro.serve import serve_step as S
+    from repro.train.train_step import TrainConfig, init_train_state, \
+        make_train_step
+
+    specs_in = input_specs(cfg, shape)
+
+    with use_rules(rules):
+        if meta["kind"] == "train":
+            mb = microbatches or pick_microbatches(cfg, meta, rules)
+            from repro.optim.adamw import AdamWConfig
+            tcfg = TrainConfig(
+                microbatches=mb,
+                optimizer=AdamWConfig(
+                    moments_dtype="bfloat16" if big else "float32"),
+            )
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0)))
+            pspecs = param_specs(state_shapes["params"], rules)
+            opt_specs = {
+                "mu": zero1_specs(state_shapes["params"], pspecs, rules),
+                "nu": zero1_specs(state_shapes["params"], pspecs, rules),
+                "step": jax.sharding.PartitionSpec(),
+            }
+            state_specs = {"params": pspecs, "opt": opt_specs}
+            bspecs = batch_pspecs(specs_in, rules)
+            step_fn = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(named(mesh, state_specs),
+                              named(mesh, bspecs)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, specs_in)
+            detail = {"microbatches": mb, "mode": "train",
+                      "seq_parallel": seq_parallel}
+        elif meta["kind"] == "prefill":
+            pspecs = param_specs(
+                jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0))),
+                rules,
+            )
+            bspecs = batch_pspecs(specs_in, rules)
+
+            def prefill_fn(params, batch):
+                return S.prefill(cfg, params, batch["tokens"],
+                                 max_len=meta["seq_len"],
+                                 frontend=batch.get("frontend"))
+
+            params_shapes = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(named(mesh, pspecs),
+                                           named(mesh, bspecs)))
+            lowered = jitted.lower(params_shapes, specs_in)
+            detail = {"mode": "prefill", "seq_parallel": seq_parallel}
+        else:  # decode
+            params_shapes = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+            pspecs = param_specs(params_shapes, rules)
+            prefix = cfg.meta_tokens + cfg.fusion_tokens
+            max_len = meta["seq_len"] + prefix
+            cache_shapes = S.cache_specs(cfg, meta["global_batch"], max_len)
+            cspecs = cache_pspecs(cache_shapes, rules)
+            bspecs = batch_pspecs(specs_in, rules)
+
+            def serve_fn(params, cache, batch):
+                return S.decode_step(cfg, params, cache, batch["tokens"])
+
+            jitted = jax.jit(
+                serve_fn,
+                in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                              named(mesh, bspecs)),
+                # logits auto; cache output MUST keep the input layout
+                # (unpinned, XLA replicates the updated cache on the way out)
+                out_shardings=(None, named(mesh, cspecs)),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params_shapes, cache_shapes, specs_in)
+            detail = {"mode": "decode", "cache_len": max_len}
+
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        detail["compile_s"] = time.monotonic() - t0
+        # single-layer-group program for scan-trip cost accounting
+        try:
+            gcompiled, trips = lower_group_program(
+                cfg, meta, rules, mesh,
+                microbatches=detail.get("microbatches", 1))
+            detail["trips"] = trips
+        except Exception as e:  # accounting is best-effort; full compile is
+            gcompiled, trips = None, 1       # the hard deliverable
+            detail["group_error"] = f"{type(e).__name__}: {e}"[:300]
+    return compiled, cfg, detail, gcompiled, trips
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             verbose: bool = True, **kw):
+    cfg = get_config(arch)
+    meta = SHAPES[shape]
+    multi = mesh_kind == "multi"
+    n_dev = 512 if multi else 256
+    label = f"{arch}__{shape}__{mesh_kind}"
+    skip = shape_skip_reason(cfg, shape)
+    record = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        print(f"[dryrun] SKIP {label}: {skip}")
+    else:
+        try:
+            compiled, cfg, detail, gcompiled, trips = lower_cell(
+                arch, shape, multi_pod=multi, **kw)
+            rec = analysis.analyze(
+                compiled, n_devices=n_dev,
+                model_flops_global=analysis.model_flops(cfg, meta),
+                label=label, group_compiled=gcompiled, trips=trips,
+            )
+            record.update(rec)
+            record.update(detail)
+            record["status"] = "ok"
+            if verbose:
+                ma = record["memory_analysis"]
+                print(f"[dryrun] OK {label}: compile={detail['compile_s']:.1f}s "
+                      f"args={_gb(ma['argument_size_in_bytes'])} "
+                      f"temp={_gb(ma['temp_size_in_bytes'])} "
+                      f"compute={record['compute_s']*1e3:.2f}ms "
+                      f"memory={record['memory_s']*1e3:.2f}ms "
+                      f"coll={record['collective_s']*1e3:.2f}ms "
+                      f"dominant={record['dominant']}")
+        except Exception as e:
+            record["status"] = "failed"
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc()[-3000:]
+            print(f"[dryrun] FAIL {label}: {type(e).__name__}: {str(e)[:500]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{label}.json"), "w") as f:
+            json.dump(record, f, indent=2, default=str)
+    return record
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}GiB" if x is not None else "?"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true", default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--pure-dp", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                extra_cfg = None
+                if args.kv_quant:
+                    import dataclasses as dc
+                    extra_cfg = dc.replace(get_config(arch), kv_quant=True)
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               microbatches=args.microbatches,
+                               seq_parallel=args.seq_parallel,
+                               no_fsdp=args.no_fsdp, pure_dp=args.pure_dp,
+                               extra_cfg=extra_cfg)
+                n_fail += rec["status"] == "failed"
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

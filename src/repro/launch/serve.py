@@ -1,0 +1,77 @@
+"""Serving launcher: batched prefill + decode on a host mesh.
+
+  python -m repro.launch.serve --arch smollm-360m --smoke --batch 4 \
+      --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.dryrun import make_rules
+    from repro.models import transformer as T
+    from repro.serve import serve_step as S
+    from repro.serve.sampler import generate
+    from repro.sharding.rules import use_rules
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(model=args.model_parallel)
+    rules = make_rules(mesh, mode="serve", multi_pod=False)
+
+    with use_rules(rules), mesh:
+        params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1),
+            (args.batch, args.prompt_len), 0, cfg.vocab_size)
+        frontend = None
+        if cfg.fusion_tokens:
+            frontend = jnp.zeros(
+                (args.batch, cfg.fusion_tokens, cfg.d_model), cfg.jax_dtype)
+        if cfg.encdec is not None:
+            frontend = jnp.zeros(
+                (args.batch, cfg.encdec.enc_seq, cfg.d_model), cfg.jax_dtype)
+
+        t0 = time.monotonic()
+        logits, cache = jax.jit(
+            lambda p, t: S.prefill(cfg, p, t, max_len=args.max_len,
+                                   frontend=frontend)
+        )(params, prompts)
+        logits.block_until_ready()
+        t_prefill = time.monotonic() - t0
+
+        first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        step = jax.jit(lambda c, t: S.decode_step(cfg, params, c, t))
+        t0 = time.monotonic()
+        toks, cache = generate(step, cache, first, args.gen,
+                               jax.random.PRNGKey(2),
+                               temperature=args.temperature)
+        toks.block_until_ready()
+        t_gen = time.monotonic() - t0
+        tps = args.batch * args.gen / t_gen
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.0f} ms; generated {args.gen} tok/seq in "
+          f"{t_gen*1e3:.0f} ms = {tps:.1f} tok/s")
+    print("[serve] sample tokens:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Training launcher.
+
+Local (this container): small meshes over host devices, e.g.
+  python -m repro.launch.train --arch smollm-360m --smoke --steps 50
+
+Cluster: set COORDINATOR_ADDRESS / NUM_PROCESSES / PROCESS_ID (GKE/TPU env)
+and the launcher calls jax.distributed.initialize before touching devices;
+the mesh then spans all pods. Elastic restarts resume from the newest
+committed checkpoint under --ckpt-dir (see train/trainer.py).
+
+XLA flags for collective/compute overlap on real hardware are set here
+(latency-hiding scheduler, async collectives) — harmless no-ops on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def _setup_distributed():
+    if os.environ.get("COORDINATOR_ADDRESS"):
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=os.environ["COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ["NUM_PROCESSES"]),
+            process_id=int(os.environ["PROCESS_ID"]),
+        )
+
+
+def _overlap_flags():
+    flags = (
+        " --xla_tpu_enable_async_collective_fusion=true"
+        " --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true"
+        " --xla_tpu_overlap_compute_collective_tc=true"
+        " --xla_enable_async_all_gather=true"
+    )
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + (
+        flags if os.environ.get("JAX_PLATFORMS", "") != "cpu" else ""
+    )
+
+
+def main():
+    _overlap_flags()
+    _setup_distributed()
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.launch.dryrun import make_rules
+    from repro.sharding.rules import (batch_pspecs, named, param_specs,
+                                      use_rules, zero1_specs)
+    from repro.train.train_step import (TrainConfig, init_train_state,
+                                        make_train_step)
+    from repro.train.trainer import LoopConfig, train_loop
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.compress import CompressionConfig
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_host_mesh(model=args.model_parallel)
+    rules = make_rules(mesh, mode="train", multi_pod=args.multi_pod)
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 20, 5)),
+        microbatches=args.microbatches,
+        compression=CompressionConfig(kind=args.compress),
+    )
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, seed=args.seed)
+
+    with use_rules(rules), mesh:
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(args.seed))
+        pspecs = param_specs(state["params"], rules)
+        state_specs = {
+            "params": pspecs,
+            "opt": {"mu": zero1_specs(state["params"], pspecs, rules),
+                    "nu": zero1_specs(state["params"], pspecs, rules),
+                    "step": jax.sharding.PartitionSpec()},
+        }
+        if "err" in state:
+            state_specs["err"] = pspecs
+        shardings = named(mesh, state_specs)
+        state = jax.device_put(state, shardings)
+        step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+        def run_step(state, batch):
+            batch = jax.device_put(
+                batch, named(mesh, batch_pspecs(batch, rules)))
+            return step_fn(state, batch)
+
+        state, info = train_loop(
+            run_step, state, dcfg,
+            LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every),
+            args.ckpt_dir, shardings=shardings,
+        )
+    print(f"[train] done: {len(info['history'])} steps, "
+          f"final loss {info['history'][-1]['loss']:.4f}, "
+          f"stragglers {info['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,499 @@
+"""GQA attention: dense, blockwise (online-softmax), and decode paths.
+
+* Dense path — small sequences (smoke tests, short training).
+* Blockwise path — O(S·chunk) memory via online softmax, scanned over a
+  *static list of (q-chunk, kv-chunk) pairs* that enumerates only the causal
+  (or sliding-window) lower triangle, so HLO FLOPs match useful FLOPs (no
+  masked-out block is ever computed). Pairs are ordered row-major (all kv
+  chunks of one q chunk consecutively), so the online-softmax state carries
+  only one q chunk at a time.
+* Decode path — one query token against a (possibly seq-sharded) KV cache;
+  softmax reductions over the sharded axis lower to tiny all-reduces
+  (flash-decoding under GSPMD).
+
+Supports: GQA (kv-head replication only when head count isn't shardable),
+qk-norm (qwen3), qkv-bias (qwen1.5), sliding window (hymba/llama4), NoPE,
+bidirectional + cross attention (whisper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models.layers import apply_rope, init_linear, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "w_q": init_linear(k1, d_model, n_heads * head_dim, bias=qkv_bias,
+                           dtype=dtype),
+        "w_k": init_linear(k2, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                           dtype=dtype),
+        "w_v": init_linear(k3, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                           dtype=dtype),
+        "w_o": init_linear(k4, n_heads * head_dim, d_model, dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((head_dim,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.zeros((head_dim,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p, x, xkv, n_heads, n_kv_heads, head_dim, *, qk_norm,
+                 policy):
+    b, s, _ = x.shape
+    skv = xkv.shape[1]
+    q = linear(p["w_q"], x, policy=policy).reshape(b, s, n_heads, head_dim)
+    k = linear(p["w_k"], xkv, policy=policy).reshape(b, skv, n_kv_heads, head_dim)
+    v = linear(p["w_v"], xkv, policy=policy).reshape(b, skv, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense attention (small S) — also the oracle for the blockwise path
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k):
+    """q (B,Sq,Hq,dh), k (B,Sk,Hkv,dh) -> scores (B,Hq,Sq,Sk) fp32."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    return s.reshape(b, hkv * g, sq, k.shape[1])
+
+
+def _gqa_out(probs, v):
+    """probs (B,Hq,Sq,Sk), v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh)."""
+    b, hq, sq, sk = probs.shape
+    hkv = v.shape[2]
+    g = hq // hkv
+    pg = probs.reshape(b, hkv, g, sq, sk)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pg, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1])
+
+
+def dense_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    q_offset: int | jax.Array = 0,
+                    sink: int = 0) -> jax.Array:
+    """Reference/simple path. Returns (B, Sq, Hq, dh) in q.dtype.
+
+    sink: first `sink` kv positions are always attendable (meta/sink tokens),
+    even outside the sliding window.
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    scores = _gqa_scores(q, k) * (dh ** -0.5)
+    qi = jnp.arange(sq)[:, None] + q_offset            # absolute q positions
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (kj > qi - window) | (kj < sink)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    if kv_len is not None:                             # per-batch valid length
+        scores = jnp.where(kj[None, None] < kv_len[:, None, None, None],
+                           scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (online softmax over a static causal pair list)
+# ---------------------------------------------------------------------------
+
+
+def _pair_list(nq: int, nk: int, causal: bool, window_chunks: Optional[int],
+               sink_chunks: int = 0):
+    """Static (qi, ki) pairs, row-major, only not-fully-masked blocks."""
+    pairs = []
+    for qi in range(nq):
+        for ki in range(nk):
+            if causal and ki > qi:
+                continue
+            if (window_chunks is not None and ki < qi - window_chunks
+                    and ki >= sink_chunks):
+                continue
+            pairs.append((qi, ki))
+    return np.asarray(pairs, np.int32)
+
+
+def _pair_flags(pairs):
+    is_last = np.zeros(len(pairs), bool)
+    row_end = {}
+    for idx, (qi, ki) in enumerate(pairs):
+        row_end[qi] = idx
+    for qi, idx in row_end.items():
+        is_last[idx] = True
+    is_first = np.zeros(len(pairs), bool)
+    seen = set()
+    for idx, (qi, ki) in enumerate(pairs):
+        if qi not in seen:
+            is_first[idx] = True
+            seen.add(qi)
+    return is_first, is_last
+
+
+def _block_mask(qi, ki, qc, kc, causal, window, sink, sk):
+    qpos = qi * qc + jnp.arange(qc)[:, None]
+    kpos = ki * kc + jnp.arange(kc)[None, :]
+    mask = jnp.ones((qc, kc), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (kpos > qpos - window) | (kpos < sink)
+    mask &= kpos < sk
+    return mask
+
+
+def _flash_fwd(q, k, v, statics):
+    """Pair-scan forward. Returns (out (nq,B,qc,Hq,dh), lse (nq,B,Hq,qc))."""
+    (causal, window, sink, qc, kc, nq, nk, sk, pairs, is_first,
+     is_last) = statics
+    _, b, _, hq, dh = q.shape
+    scale = dh ** -0.5
+
+    def body(carry, inp):
+        out, lse, m, l, acc = carry
+        qi, ki, first, last = inp
+        qb = jax.lax.dynamic_index_in_dim(q, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(k, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(v, ki, 0, keepdims=False)
+        m = jnp.where(first, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+
+        s = _gqa_scores(qb, kb) * scale                   # (B,Hq,qc,kc) f32
+        mask = _block_mask(qi, ki, qc, kc, causal, window, sink, sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + _gqa_out(p, vb)
+        m = m_new
+
+        def finalize(bufs):
+            out, lse = bufs
+            res = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, res.astype(out.dtype), qi, 0)
+            lse = jax.lax.dynamic_update_index_in_dim(
+                lse, m + jnp.log(jnp.maximum(l, 1e-30)), qi, 0)
+            return out, lse
+
+        out, lse = jax.lax.cond(last, finalize, lambda bufs: bufs,
+                                (out, lse))
+        return (out, lse, m, l, acc), None
+
+    out0 = jnp.zeros((nq, b, qc, hq, dh), q.dtype)
+    lse0 = jnp.zeros((nq, b, hq, qc), jnp.float32)
+    m0 = jnp.full((b, hq, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, qc), jnp.float32)
+    acc0 = jnp.zeros((b, qc, hq, dh), jnp.float32)
+    xs = (jnp.asarray(pairs[:, 0]), jnp.asarray(pairs[:, 1]),
+          jnp.asarray(is_first), jnp.asarray(is_last))
+    (out, lse, _, _, _), _ = jax.lax.scan(
+        body, (out0, lse0, m0, l0, acc0), xs)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, statics):
+    out, _ = _flash_fwd(q, k, v, statics)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, statics):
+    out, lse = _flash_fwd(q, k, v, statics)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(statics, res, dout):
+    """Flash backward: recompute P per block pair from saved lse.
+
+    Residuals are O(S) (q, k, v, out, lse) — never the (S x S) score matrix.
+    """
+    (causal, window, sink, qc, kc, nq, nk, sk, pairs, is_first,
+     is_last) = statics
+    q, k, v, out, lse = res
+    b = q.shape[1]
+    hq, dh = q.shape[3], q.shape[4]
+    hkv = k.shape[3]
+    g = hq // hkv
+    scale = dh ** -0.5
+    # D_i = rowsum(dO * O)  per (nq, B, Hq, qc)
+    d_term = jnp.einsum("nbqhd,nbqhd->nbhq", dout.astype(jnp.float32),
+                        out.astype(jnp.float32))
+
+    def body(carry, inp):
+        dq, dk, dv, dq_acc = carry
+        qi, ki, first, last = inp
+        qb = jax.lax.dynamic_index_in_dim(q, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(k, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(v, ki, 0, keepdims=False)
+        dob = jax.lax.dynamic_index_in_dim(dout, qi, 0, keepdims=False)
+        lseb = jax.lax.dynamic_index_in_dim(lse, qi, 0, keepdims=False)
+        dterm_b = jax.lax.dynamic_index_in_dim(d_term, qi, 0, keepdims=False)
+        dq_acc = jnp.where(first, jnp.zeros_like(dq_acc), dq_acc)
+
+        s = _gqa_scores(qb, kb) * scale                   # (B,Hq,qc,kc)
+        mask = _block_mask(qi, ki, qc, kc, causal, window, sink, sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])                  # (B,Hq,qc,kc)
+
+        dof = dob.astype(jnp.float32)                     # (B,qc,Hq,dh)
+        vf = vb.astype(jnp.float32)
+        pg = p.reshape(b, hkv, g, qc, kc)
+        dog = dof.reshape(b, qc, hkv, g, dh)
+        # dV_j += P^T dO
+        dvb = jnp.einsum("bhgqk,bqhgd->bkhd", pg, dog)
+        # dP = dO V^T ; dS = P * (dP - D) * scale
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, vf)
+        ds = pg * (dp - dterm_b.reshape(b, hkv, g, qc)[..., None]) * scale
+        # dQ_i += dS K ; dK_j += dS^T Q
+        dqb = jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                         kb.astype(jnp.float32)).reshape(b, qc, hq, dh)
+        dkb = jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                         qb.astype(jnp.float32).reshape(b, qc, hkv, g, dh))
+        dq_acc = dq_acc + dqb
+        dk = dk.at[ki].add(dkb)
+        dv = dv.at[ki].add(dvb)
+
+        def wr(dq):
+            return jax.lax.dynamic_update_index_in_dim(
+                dq, dq_acc.astype(dq.dtype), qi, 0)
+        dq = jax.lax.cond(last, wr, lambda dq: dq, dq)
+        return (dq, dk, dv, dq_acc), None
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    dqa0 = jnp.zeros((b, qc, hq, dh), jnp.float32)
+    xs = (jnp.asarray(pairs[:, 0]), jnp.asarray(pairs[:, 1]),
+          jnp.asarray(is_first), jnp.asarray(is_last))
+    (dq, dk, dv, _), _ = jax.lax.scan(body, (dq0, dk0, dv0, dqa0), xs)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        sink: int = 0,
+                        chunk: int = 1024) -> jax.Array:
+    """Flash attention in pure JAX: online softmax over a static causal
+    block-pair list, custom VJP (scores recomputed in backward -> O(S)
+    residuals). q (B,Sq,Hq,dh); k/v (B,Sk,Hkv,dh)."""
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    qc = min(chunk, sq)
+    kc = min(chunk, sk)
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // qc, (sk + pad_k) // kc
+    wc = None if window is None else max(1, -(-window // kc))
+    sc = 0 if not sink else -(-sink // kc)
+    pairs = _pair_list(nq, nk, causal, wc, sc)
+    is_first, is_last = _pair_flags(pairs)
+    statics = (causal, window, sink, qc, kc, nq, nk, sk,
+               _Hashable(pairs), _Hashable(is_first), _Hashable(is_last))
+
+    qr = q.reshape(b, nq, qc, hq, dh).swapaxes(0, 1)     # (nq,B,qc,Hq,dh)
+    kr = k.reshape(b, nk, kc, hkv, dh).swapaxes(0, 1)
+    vr = v.reshape(b, nk, kc, hkv, dh).swapaxes(0, 1)
+    out = _flash(qr, kr, vr, statics)
+    out = out.swapaxes(0, 1).reshape(b, nq * qc, hq, dh)
+    return out[:, :sq]
+
+
+class _Hashable:
+    """Hashable ndarray wrapper (for custom_vjp nondiff static args)."""
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = arr
+        self._key = arr.tobytes()
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, _Hashable) and self._key == other._key
+
+    def __getitem__(self, i):
+        return self.arr[i]
+
+    def __len__(self):
+        return len(self.arr)
+
+    def __array__(self, dtype=None, copy=None):
+        return np.asarray(self.arr, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (self / cross; train or prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    p, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sink: int = 0,
+    rope_theta: Optional[float] = 1e4,
+    qk_norm: bool = False,
+    xkv: Optional[jax.Array] = None,           # cross attention source
+    chunk: int = 1024,
+    policy: KernelPolicy = DEFAULT_POLICY,
+    return_kv: bool = False,
+):
+    """Returns attention block output (B, S, d_model) [, (k, v)]."""
+    b, s, _ = x.shape
+    src = x if xkv is None else xkv
+    q, k, v = _project_qkv(p, x, src, n_heads, n_kv_heads, head_dim,
+                           qk_norm=qk_norm, policy=policy)
+    if rope_theta is not None and xkv is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    from repro.sharding.rules import shard_act
+    q = shard_act(q, "heads4")
+    if s <= chunk and src.shape[1] <= chunk:
+        out = dense_attention(q, k, v, causal=causal and xkv is None,
+                              window=window, sink=sink)
+    else:
+        out = blockwise_attention(q, k, v, causal=causal and xkv is None,
+                                  window=window, sink=sink, chunk=chunk)
+    out = out.reshape(b, s, n_heads * head_dim)
+    out = linear(p["w_o"], out, policy=policy)
+    if return_kv:
+        # captured KV becomes the decode cache: shard its sequence dim the
+        # way the cache is sharded (flash-decoding layout)
+        k = shard_act(k, "cache")
+        v = shard_act(v, "cache")
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def _quantize_vec(x):
+    """x (..., dh) -> (int8 values, f32 scale (...,))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(
+    p, x_t, cache_k, cache_v, pos, *, n_heads: int, n_kv_heads: int,
+    head_dim: int, window: Optional[int] = None,
+    rope_theta: Optional[float] = 1e4, qk_norm: bool = False,
+    ring: bool = False, sink: int = 0,
+    scales: Optional[tuple] = None,   # (k_scale, v_scale) for int8 caches
+    policy: KernelPolicy = DEFAULT_POLICY,
+):
+    """x_t (B,1,d); cache_k/v (B,Sc,Hkv,dh); pos (B,) current index.
+
+    ring=True: the cache is a StreamingLLM-style buffer: `sink` permanent
+    slots + a ring of (Sc - sink) sliding-window slots. Positions past the
+    buffer wrap within the ring part; every populated slot is attendable.
+
+    scales: int8-quantized cache (per-(B,S,Hkv) vector scales) — halves the
+    per-token HBM read volume of the cache.
+    Returns (out (B,1,d), new_k, new_v[, new_scales]).
+    """
+    b = x_t.shape[0]
+    q, k, v = _project_qkv(p, x_t, x_t, n_heads, n_kv_heads, head_dim,
+                           qk_norm=qk_norm, policy=policy)
+    if rope_theta is not None:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
+    smax = cache_k.shape[1]
+    if ring:
+        ring_len = smax - sink
+        slot = jnp.where(pos < smax, pos, sink + (pos - sink) % ring_len)
+    else:
+        slot = pos
+    # one-hot (mask+select) cache write: elementwise, so GSPMD keeps the
+    # sequence-sharded layout (a scatter at a dynamic index would force the
+    # partitioner to replicate the whole cache layer)
+    wmask = (jnp.arange(smax)[None, :] == slot[:, None])[..., None, None]
+    if scales is not None:
+        k_scale, v_scale = scales
+        k8, ks_new = _quantize_vec(k[:, 0])          # (B,Hkv,dh)/(B,Hkv)
+        v8, vs_new = _quantize_vec(v[:, 0])
+        cache_k = jnp.where(wmask, k8[:, None], cache_k)
+        cache_v = jnp.where(wmask, v8[:, None], cache_v)
+        smask = wmask[..., 0, 0][..., None]
+        k_scale = jnp.where(smask, ks_new[:, None], k_scale)
+        v_scale = jnp.where(smask, vs_new[:, None], v_scale)
+    else:
+        cache_k = jnp.where(wmask, k[:, 0][:, None].astype(cache_k.dtype),
+                            cache_k)
+        cache_v = jnp.where(wmask, v[:, 0][:, None].astype(cache_v.dtype),
+                            cache_v)
+
+    from repro.sharding.rules import shard_act
+    cache_k = shard_act(cache_k, "cache")
+    cache_v = shard_act(cache_v, "cache")
+    q = shard_act(q, "q_decode")
+    if scales is not None:
+        k_eff = cache_k.astype(jnp.bfloat16) * k_scale[..., None].astype(
+            jnp.bfloat16)
+        v_eff = cache_v.astype(jnp.bfloat16) * v_scale[..., None].astype(
+            jnp.bfloat16)
+    else:
+        k_eff, v_eff = cache_k, cache_v
+    scores = _gqa_scores(q, k_eff) * (head_dim ** -0.5)  # (B,Hq,1,Smax)
+    scores = shard_act(scores, "scores_decode")
+    j = jnp.arange(smax)[None, :]
+    if ring:
+        valid = j < jnp.minimum(pos + 1, smax)[:, None]
+    else:
+        valid = j <= pos[:, None]
+        if window is not None:
+            valid &= (j > (pos[:, None] - window)) | (j < sink)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v_eff).astype(x_t.dtype)         # (B,1,Hq,dh)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    proj = linear(p["w_o"], out, policy=policy)
+    if scales is not None:
+        return proj, cache_k, cache_v, (k_scale, v_scale)
+    return proj, cache_k, cache_v

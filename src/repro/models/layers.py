@@ -1,0 +1,159 @@
+"""Primitive layers: norms, RoPE, Linear (routed through the paper's PWConv),
+embedding, and chunked cross-entropy.
+
+Params are plain nested dicts. Every key used here is registered in
+``repro.sharding.rules.LOGICAL_AXES`` so sharding specs can be derived by
+name.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 internals regardless of activation dtype)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: Optional[jax.Array] = None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(x, params, kind: str = "rms"):
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params.get("bias"))
+
+
+def init_norm(kind: str, d: int, with_bias: bool = False):
+    p = {"scale": jnp.zeros((d,), jnp.float32)}
+    if kind == "layer" and with_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Linear == the paper's PWConv
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None):
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x: jax.Array, *, activation: Optional[str] = None,
+           policy: KernelPolicy = DEFAULT_POLICY) -> jax.Array:
+    return pointwise(x, p["w"], p.get("b"), activation=activation,
+                     policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (B,S,dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (vocab up to 256k -> never materialize
+# full (B, S, V) logits; scan over sequence chunks instead)
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * d ** -0.5).astype(dtype)}
+
+
+def embed(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """x (..., d) @ table.T (V, d) -> (..., V) in fp32."""
+    return jnp.dot(x, table.T, preferred_element_type=jnp.float32)
+
+
+def chunked_cross_entropy(
+    x: jax.Array,            # (B, S, d) final hidden states
+    table: jax.Array,        # (V, d) unembedding
+    labels: jax.Array,       # (B, S) int32; -1 = ignore
+    *,
+    chunk: int = 512,
+    z_loss: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean token NLL + count, computed in sequence chunks to bound the
+    (B, chunk, V) logits working set. Returns (sum_nll, n_tokens)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    xs = x.reshape(b, nc, chunk, d).swapaxes(0, 1)          # (nc, B, chunk, d)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute (B, chunk, V) logits in backward
+    def chunk_loss(xc, lc):
+        logits = unembed_logits(xc, table)                   # (B, chunk, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        return jnp.sum(nll), jnp.sum(valid), jnp.sum(jnp.square(lse) * valid)
+
+    def body(carry, inp):
+        nll_sum, n_tok, zsum = carry
+        xc, lc = inp
+        nll, nv, zs = chunk_loss(xc, lc)
+        return (nll_sum + nll, n_tok + nv, zsum + zs), None
+
+    (nll_sum, n_tok, zsum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)), (xs, ls)
+    )
+    if z_loss:
+        nll_sum = nll_sum + z_loss * zsum
+    return nll_sum, n_tok

@@ -1,0 +1,23 @@
+"""Dense SwiGLU MLP — three PWConv (paper-op) projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models.layers import init_linear, linear
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "w_up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "w_down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p, x: jax.Array, *, policy: KernelPolicy = DEFAULT_POLICY) -> jax.Array:
+    g = linear(p["w_gate"], x, activation="silu", policy=policy)
+    u = linear(p["w_up"], x, policy=policy)
+    return linear(p["w_down"], g * u, policy=policy)

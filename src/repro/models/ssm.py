@@ -1,0 +1,170 @@
+"""Selective SSM (Mamba-style) mixer — the DWConv-1d consumer.
+
+The conv preactivation is the paper's depthwise convolution
+(kernels/dwconv1d.py on TPU; jnp ref elsewhere). The selective scan is
+chunked: a ``lax.scan`` over time chunks carrying the (B, d_inner, N) state,
+with an associative scan inside each chunk — bounds the materialized
+(B, chunk, d_inner, N) discretized tensors.
+
+Used by hymba-1.5b (parallel attn+mamba heads) and available standalone.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.core.dwconv import depthwise1d_causal, depthwise1d_step
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models.layers import init_linear, linear
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    di = d_model * cfg.expand
+    n = cfg.d_state
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(bias) spans [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(ks[5], (di,))
+    dt0 = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+                  + jnp.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_in": init_linear(ks[0], d_model, 2 * di, dtype=dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_k, di)) *
+                 cfg.conv_k ** -0.5).astype(jnp.float32),
+        "w_bcdt": init_linear(ks[2], di, 2 * n + dt_rank, dtype=dtype),
+        "w_dt": init_linear(ks[3], dt_rank, di, dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": init_linear(ks[4], di, d_model, dtype=dtype),
+    }
+
+
+def selective_scan(
+    u: jax.Array,            # (B, L, di) conv+silu output
+    dt: jax.Array,           # (B, L, di) softplus'd step sizes
+    a: jax.Array,            # (di, N)  negative (=-exp(a_log))
+    b: jax.Array,            # (B, L, N)
+    c: jax.Array,            # (B, L, N)
+    d_skip: jax.Array,       # (di,)
+    *,
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,  # (B, di, N)
+):
+    """Returns (y (B, L, di) f32, h_last (B, di, N) f32)."""
+    nb, l, di = u.shape
+    n = a.shape[1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // chunk
+
+    def to_chunks(x):
+        return x.reshape(nb, nc, chunk, -1).swapaxes(0, 1)
+
+    xs = (to_chunks(u.astype(jnp.float32)), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(b.astype(jnp.float32)), to_chunks(c.astype(jnp.float32)))
+    h_init = (jnp.zeros((nb, di, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(h, inp):
+        uc, dtc, bc, cc = inp                              # (nb, chunk, .)
+        da = jnp.exp(dtc[..., None] * a[None, None])       # (nb,c,di,N)
+        dbu = (dtc * uc)[..., None] * bc[:, :, None, :]    # (nb,c,di,N)
+
+        def op(lhs, rhs):
+            return (rhs[0] * lhs[0], rhs[0] * lhs[1] + rhs[1])
+
+        a_cum, hs = jax.lax.associative_scan(op, (da, dbu), axis=1)
+        hs = hs + a_cum * h[:, None]                       # add carry-in
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, h_init, xs)
+    y = ys.swapaxes(0, 1).reshape(nb, nc * chunk, di)[:, :l]
+    y = y + u[:, :l].astype(jnp.float32) * d_skip[None, None]
+    return y, h_last
+
+
+def selective_step(h, u_t, dt_t, a, b_t, c_t, d_skip):
+    """One decode step. h (B,di,N); u_t/dt_t (B,di); b_t/c_t (B,N)."""
+    da = jnp.exp(dt_t[..., None] * a[None])                # (B,di,N)
+    dbu = (dt_t * u_t)[..., None] * b_t[:, None, :]
+    h = da * h + dbu
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + u_t * d_skip[None]
+    return h, y
+
+
+def _proj_scan_inputs(p, xi, cfg: SSMConfig, policy):
+    """xi (..., di) conv+silu output -> (dt, b, c)."""
+    n = cfg.d_state
+    bcdt = linear(p["w_bcdt"], xi, policy=policy).astype(jnp.float32)
+    b, c, dt_low = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = linear(p["w_dt"], dt_low.astype(xi.dtype), policy=policy)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return dt, b, c
+
+
+def mamba_mixer(p, x: jax.Array, cfg: SSMConfig, *,
+                policy: KernelPolicy = DEFAULT_POLICY,
+                h0=None, conv_state=None, return_state: bool = False):
+    """Full-sequence mixer. x (B, L, d) -> (B, L, d).
+
+    return_state: also return the decode cache {h, conv} after the last
+    position (conv = last K-1 *pre-conv* inputs, matching mamba_mixer_step).
+    """
+    xz = linear(p["w_in"], x, policy=policy)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                  # (B, L, di)
+    xi = depthwise1d_causal(xi_raw, p["conv"].astype(xi_raw.dtype),
+                            policy=policy)
+    xi = jax.nn.silu(xi)
+    dt, b, c = _proj_scan_inputs(p, xi, cfg, policy)
+    a = -jnp.exp(p["a_log"])
+    y, h_last = selective_scan(xi, dt, a, b, c, p["d_skip"],
+                               chunk=cfg.chunk, h0=h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = linear(p["w_out"], y, policy=policy)
+    if return_state:
+        kc = p["conv"].shape[0]
+        tail = xi_raw[:, -(kc - 1):, :].astype(jnp.float32)
+        pad = (kc - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"h": h_last, "conv": tail}
+    return out
+
+
+def init_mamba_state(batch: int, d_model: int, cfg: SSMConfig):
+    di = d_model * cfg.expand
+    return {
+        "h": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, max(cfg.conv_k - 1, 1), di), jnp.float32),
+    }
+
+
+def mamba_mixer_step(p, x_t: jax.Array, state: dict, cfg: SSMConfig, *,
+                     policy: KernelPolicy = DEFAULT_POLICY):
+    """One decode step. x_t (B, 1, d); state from init_mamba_state."""
+    bsz = x_t.shape[0]
+    xz = linear(p["w_in"], x_t[:, 0], policy=policy)       # (B, 2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state, xi = depthwise1d_step(
+        state["conv"].astype(xi.dtype), xi, p["conv"].astype(xi.dtype)
+    )
+    xi = jax.nn.silu(xi)
+    dt, b, c = _proj_scan_inputs(p, xi, cfg, policy)
+    a = -jnp.exp(p["a_log"])
+    h, y = selective_step(state["h"], xi.astype(jnp.float32), dt, a, b, c,
+                          p["d_skip"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    out = linear(p["w_out"], y, policy=policy)[:, None, :]
+    return out, {"h": h, "conv": conv_state.astype(jnp.float32)}

@@ -1,0 +1,501 @@
+"""Model assembly for every assigned architecture.
+
+Layer stacking is a *periodic pattern scan*: a config expands to a repeating
+pattern of layer variants (e.g. llama4: 3 sliding-window layers + 1 global
+NoPE layer; xLSTM: [mLSTM, sLSTM]; dense: [attn_mlp]). Parameters are stacked
+per variant position with a leading (n_layers/period) axis and the model body
+is one ``lax.scan`` over pattern groups — HLO size stays O(period), which is
+what keeps 80/94-layer models compilable for the 512-device dry run.
+
+Forward modes:
+* hidden_states    — full sequence (train / prefill), blockwise attention.
+* loss_fn          — chunked cross-entropy (+ MoE aux losses).
+* prefill          — hidden_states + per-layer cache capture.
+* decode_step      — one token through the pattern with stacked caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed,
+    init_embedding,
+    init_linear,
+    init_norm,
+    linear,
+    norm,
+    unembed_logits,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.sharding.rules import current_rules, shard_act
+
+
+# ---------------------------------------------------------------------------
+# Layer variants and patterns
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerVariant:
+    kind: str                      # attn_mlp | hymba | mlstm | slstm | enc | dec
+    window: Optional[int] = None
+    rope: bool = True
+    use_moe: bool = False
+    sink: int = 0
+
+
+def layer_pattern(cfg: ModelConfig) -> list[LayerVariant]:
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        every = max(cfg.xlstm.slstm_every, 1)
+        return [LayerVariant(kind="mlstm")] * (every - 1) + [
+            LayerVariant(kind="slstm")
+        ]
+    if cfg.family == "hybrid":
+        return [LayerVariant(kind="hymba", window=cfg.sliding_window,
+                             sink=cfg.meta_tokens)]
+    import math
+    ge = cfg.global_every if (cfg.global_every and cfg.sliding_window) else 1
+    me = cfg.moe_every if cfg.moe is not None else 1
+    period = math.lcm(ge, me)
+    variants = []
+    for i in range(period):
+        is_global = ge > 1 and (i % ge == ge - 1)
+        variants.append(LayerVariant(
+            kind="attn_mlp",
+            window=None if is_global else cfg.sliding_window,
+            rope=not (is_global and cfg.nope_on_global),
+            use_moe=cfg.moe is not None and (i % me == me - 1),
+        ))
+    return variants
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / forward / decode by variant kind
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_params(key, cfg: ModelConfig):
+    return attn_lib.init_attention(
+        key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=cfg.jax_dtype,
+    )
+
+
+def init_layer(key, cfg: ModelConfig, variant: LayerVariant):
+    ks = jax.random.split(key, 6)
+    dtype = cfg.jax_dtype
+    if variant.kind == "mlstm":
+        return xlstm_lib.init_mlstm_block(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.xlstm, dtype=dtype)
+    if variant.kind == "slstm":
+        return xlstm_lib.init_slstm_block(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.xlstm, dtype=dtype)
+    p = {
+        "ln_attn": init_norm(cfg.norm_type, cfg.d_model),
+        "attn": _init_attn_params(ks[0], cfg),
+    }
+    if variant.kind == "hymba":
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg.d_model, cfg.ssm,
+                                        dtype=dtype)
+        p["ln_out_attn"] = init_norm("rms", cfg.d_model)
+        p["ln_out_mamba"] = init_norm("rms", cfg.d_model)
+    if variant.kind == "dec":
+        p["ln_cross"] = init_norm(cfg.norm_type, cfg.d_model)
+        p["cross"] = _init_attn_params(ks[2], cfg)
+    if not cfg.parallel_block:
+        p["ln_mlp"] = init_norm(cfg.norm_type, cfg.d_model)
+    if variant.use_moe:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg.d_model, cfg.moe, cfg.d_ff,
+                                    dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def _moe_kwargs():
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return dict(mesh=None)
+    return dict(mesh=r.mesh, data_axes=r.batch_axes,
+                model_axis=r.model_axis)
+
+
+def layer_forward(p, x, cfg: ModelConfig, variant: LayerVariant, *,
+                  positions=None, xkv=None, causal=True,
+                  policy: KernelPolicy = DEFAULT_POLICY,
+                  capture_kv: bool = False):
+    """x (B,S,d) -> (x', aux) where aux = {moe metrics, captured kv/state}."""
+    aux: dict[str, Any] = {}
+    if variant.kind == "mlstm":
+        res = xlstm_lib.mlstm_block(
+            p, x, n_heads=cfg.n_heads, cfg=cfg.xlstm, chunk=cfg.attn_chunk // 8,
+            policy=policy, return_cache=capture_kv,
+        )
+        if capture_kv:
+            res, aux["state"] = res
+        return res, aux
+    if variant.kind == "slstm":
+        res = xlstm_lib.slstm_block(
+            p, x, n_heads=cfg.n_heads, cfg=cfg.xlstm, chunk=cfg.attn_chunk // 8,
+            policy=policy, return_cache=capture_kv,
+        )
+        if capture_kv:
+            res, aux["state"] = res
+        return res, aux
+
+    attn_kwargs = dict(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        positions=positions, window=variant.window, sink=variant.sink,
+        rope_theta=cfg.rope_theta if variant.rope else None,
+        qk_norm=cfg.qk_norm, chunk=cfg.attn_chunk, policy=policy,
+        causal=causal,
+    )
+    xn = norm(x, p["ln_attn"], cfg.norm_type)
+    res = attn_lib.attention(p["attn"], xn, return_kv=capture_kv,
+                             **attn_kwargs)
+    attn_out, kv = res if capture_kv else (res, None)
+    if capture_kv:
+        aux["kv"] = kv
+
+    if variant.kind == "hymba":
+        mres = ssm_lib.mamba_mixer(p["mamba"], xn, cfg.ssm, policy=policy,
+                                   return_state=capture_kv)
+        if capture_kv:
+            mamba_out, aux["state"] = mres
+        else:
+            mamba_out = mres
+        mixed = 0.5 * (norm(attn_out, p["ln_out_attn"], "rms")
+                       + norm(mamba_out, p["ln_out_mamba"], "rms"))
+        x = x + mixed
+        xn2 = norm(x, p["ln_mlp"], cfg.norm_type)
+        x = x + mlp(p["mlp"], xn2, policy=policy)
+        return x, aux
+
+    if variant.kind == "dec":
+        x = x + attn_out
+        xc = norm(x, p["ln_cross"], cfg.norm_type)
+        cross_kwargs = dict(attn_kwargs)
+        cross_kwargs.update(positions=None, window=None, sink=0)
+        cres = attn_lib.attention(p["cross"], xc, xkv=xkv,
+                                  return_kv=capture_kv, **cross_kwargs)
+        cross_out, ckv = cres if capture_kv else (cres, None)
+        if capture_kv:
+            aux["cross_kv"] = ckv
+        x = x + cross_out
+        xn2 = norm(x, p["ln_mlp"], cfg.norm_type)
+        return x + mlp(p["mlp"], xn2, policy=policy), aux
+
+    if cfg.parallel_block:  # command-r: shared input norm, parallel residual
+        mlp_out = mlp(p["mlp"], xn, policy=policy)
+        return x + attn_out + mlp_out, aux
+
+    x = x + attn_out
+    xn2 = norm(x, p["ln_mlp"], cfg.norm_type)
+    if variant.use_moe:
+        y, moe_aux = moe_lib.moe_forward(p["moe"], xn2, cfg.moe,
+                                         policy=policy, **_moe_kwargs())
+        aux.update(moe_aux)
+        return x + y, aux
+    return x + mlp(p["mlp"], xn2, policy=policy), aux
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode (one token) + cache containers
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ModelConfig, variant: LayerVariant, batch: int,
+                     max_len: int):
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    kdtype = cfg.jax_dtype
+    if variant.kind == "mlstm":
+        return xlstm_lib.init_mlstm_cache(batch, cfg.d_model, cfg.n_heads,
+                                          cfg.xlstm)
+    if variant.kind == "slstm":
+        return xlstm_lib.init_slstm_cache(batch, cfg.d_model, cfg.n_heads,
+                                          cfg.xlstm)
+    if variant.window is not None and max_len > variant.window + variant.sink:
+        s_c = variant.window + variant.sink      # streaming ring buffer
+    else:
+        s_c = max_len
+    if cfg.kv_quant:
+        cache = {
+            "k": jnp.zeros((batch, s_c, hkv, dh), jnp.int8),
+            "v": jnp.zeros((batch, s_c, hkv, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, s_c, hkv), jnp.float32),
+            "v_scale": jnp.zeros((batch, s_c, hkv), jnp.float32),
+        }
+    else:
+        cache = {
+            "k": jnp.zeros((batch, s_c, hkv, dh), kdtype),
+            "v": jnp.zeros((batch, s_c, hkv, dh), kdtype),
+        }
+    if variant.kind == "hymba":
+        cache["mamba"] = ssm_lib.init_mamba_state(batch, cfg.d_model, cfg.ssm)
+    return cache
+
+
+def layer_decode(p, x_t, cache, pos, cfg: ModelConfig, variant: LayerVariant,
+                 *, enc_kv=None, policy: KernelPolicy = DEFAULT_POLICY):
+    """x_t (B,1,d), per-layer cache -> (x_t', cache')."""
+    if variant.kind == "mlstm":
+        return xlstm_lib.mlstm_block_step(p, x_t, cache, n_heads=cfg.n_heads,
+                                          cfg=cfg.xlstm, policy=policy)
+    if variant.kind == "slstm":
+        return xlstm_lib.slstm_block_step(p, x_t, cache, n_heads=cfg.n_heads,
+                                          cfg=cfg.xlstm, policy=policy)
+
+    ring = (variant.window is not None
+            and cache["k"].shape[1] < 10**9
+            and cache["k"].shape[1] == variant.window + variant.sink)
+    xn = norm(x_t, p["ln_attn"], cfg.norm_type)
+    scales = ((cache["k_scale"], cache["v_scale"])
+              if cfg.kv_quant else None)
+    res = attn_lib.attention_decode(
+        p["attn"], xn, cache["k"], cache["v"], pos,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        window=variant.window, sink=variant.sink, ring=ring,
+        scales=scales,
+        rope_theta=cfg.rope_theta if variant.rope else None,
+        qk_norm=cfg.qk_norm, policy=policy,
+    )
+    if cfg.kv_quant:
+        attn_out, new_k, new_v, (ks, vs) = res
+        cache = dict(cache, k=new_k, v=new_v, k_scale=ks, v_scale=vs)
+    else:
+        attn_out, new_k, new_v = res
+        cache = dict(cache, k=new_k, v=new_v)
+
+    if variant.kind == "hymba":
+        mamba_out, mstate = ssm_lib.mamba_mixer_step(
+            p["mamba"], xn, cache["mamba"], cfg.ssm, policy=policy
+        )
+        cache["mamba"] = mstate
+        mixed = 0.5 * (norm(attn_out, p["ln_out_attn"], "rms")
+                       + norm(mamba_out, p["ln_out_mamba"], "rms"))
+        x_t = x_t + mixed
+        xn2 = norm(x_t, p["ln_mlp"], cfg.norm_type)
+        return x_t + mlp(p["mlp"], xn2, policy=policy), cache
+
+    if variant.kind == "dec":
+        x_t = x_t + attn_out
+        xc = norm(x_t, p["ln_cross"], cfg.norm_type)
+        enc_k, enc_v = enc_kv
+        q, _, _ = attn_lib._project_qkv(
+            p["cross"], xc, xc, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, policy=policy,
+        )
+        cross = attn_lib.dense_attention(q, enc_k, enc_v, causal=False)
+        cross = cross.reshape(x_t.shape[0], 1, cfg.n_heads * cfg.head_dim)
+        x_t = x_t + linear(p["cross"]["w_o"], cross, policy=policy)
+        xn2 = norm(x_t, p["ln_mlp"], cfg.norm_type)
+        return x_t + mlp(p["mlp"], xn2, policy=policy), cache
+
+    if cfg.parallel_block:
+        return x_t + attn_out + mlp(p["mlp"], xn, policy=policy), cache
+
+    x_t = x_t + attn_out
+    xn2 = norm(x_t, p["ln_mlp"], cfg.norm_type)
+    if variant.use_moe:
+        y, _ = moe_lib.moe_forward(p["moe"], xn2, cfg.moe, policy=policy,
+                                   **_moe_kwargs())
+        return x_t + y, cache
+    return x_t + mlp(p["mlp"], xn2, policy=policy), cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pattern = layer_pattern(cfg)
+    if cfg.encdec is not None:
+        pattern = [LayerVariant(kind="dec")]
+    period = len(pattern)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    groups = cfg.n_layers // period
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embedding": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                    dtype=cfg.jax_dtype),
+        "ln_final": init_norm(cfg.norm_type, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ks[1], cfg.vocab_size, cfg.d_model,
+                                           dtype=cfg.jax_dtype)
+    for vi, variant in enumerate(pattern):
+        params[f"blocks_v{vi}"] = _stack_init(
+            lambda k, v=variant: init_layer(k, cfg, v),
+            jax.random.fold_in(ks[2], vi), groups,
+        )
+    if cfg.meta_tokens:
+        params["meta"] = (jax.random.normal(
+            ks[5], (cfg.meta_tokens, cfg.d_model)) * 0.02
+        ).astype(cfg.jax_dtype)
+    if cfg.encdec is not None:
+        enc_variant = LayerVariant(kind="attn_mlp")
+        params["enc_blocks"] = _stack_init(
+            lambda k: init_layer(k, cfg, enc_variant), ks[6],
+            cfg.encdec.n_enc_layers,
+        )
+        params["enc_ln_final"] = init_norm(cfg.norm_type, cfg.d_model)
+        params["enc_pos"] = (jax.random.normal(
+            ks[7], (cfg.encdec.enc_seq, cfg.d_model)) * 0.02
+        ).astype(cfg.jax_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+def _run_encoder(cfg, params, frames, policy):
+    """Whisper encoder over stubbed frame embeddings (B, Senc, d)."""
+    x = frames + params["enc_pos"][None].astype(frames.dtype)
+    x = shard_act(x, "btd")
+    variant = LayerVariant(kind="attn_mlp")
+
+    def body(x, p_layer):
+        def blk(x):
+            y, _ = layer_forward(p_layer, x, cfg, variant, causal=False,
+                                 policy=policy)
+            return y
+        return _maybe_remat(blk, cfg)(x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm(x, params["enc_ln_final"], cfg.norm_type)
+
+
+def hidden_states(cfg: ModelConfig, params, tokens, *, frontend=None,
+                  policy: KernelPolicy = DEFAULT_POLICY,
+                  capture_kv: bool = False):
+    """tokens (B, S) -> (hidden (B, P+S, d), prefix_len P, aux).
+
+    frontend: stubbed modality embeddings (VLM patches / llama4 fusion), or
+    encoder frames for enc-dec models (consumed by the encoder).
+    aux: accumulated MoE metrics and (if capture_kv) per-layer kv stacks.
+    """
+    b, s = tokens.shape
+    x = embed(params["embedding"], tokens)
+    prefix = 0
+    enc_out = None
+    if cfg.encdec is not None:
+        assert frontend is not None, "enc-dec model needs encoder frames"
+        enc_out = _run_encoder(cfg, params, frontend, policy)
+    else:
+        pieces = []
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(params["meta"][None],
+                                    (b, cfg.meta_tokens, cfg.d_model))
+            pieces.append(meta.astype(x.dtype))
+            prefix += cfg.meta_tokens
+        if frontend is not None:
+            pieces.append(frontend.astype(x.dtype))
+            prefix += frontend.shape[1]
+        if pieces:
+            x = jnp.concatenate(pieces + [x], axis=1)
+    x = shard_act(x, "btd")
+    total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+
+    pattern = layer_pattern(cfg)
+    if cfg.encdec is not None:
+        pattern = [LayerVariant(kind="dec")]
+
+    aux_init = {"aux_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+    kv_stacks: dict[int, Any] = {}
+
+    def group_body(carry, p_group):
+        x, aux = carry
+        capt = {}
+        for vi, variant in enumerate(pattern):
+            p_layer = p_group[f"blocks_v{vi}"]
+
+            def blk(x, p_layer=p_layer, variant=variant):
+                return layer_forward(
+                    p_layer, x, cfg, variant, positions=positions,
+                    xkv=enc_out, policy=policy, capture_kv=capture_kv,
+                )
+            y, a = _maybe_remat(blk, cfg)(x)
+            x = shard_act(y, "btd")
+            if "aux_loss" in a:
+                aux = {
+                    "aux_loss": aux["aux_loss"] + a["aux_loss"],
+                    "drop_frac": aux["drop_frac"] + a["drop_frac"],
+                }
+            if capture_kv:
+                capt[f"v{vi}"] = {k: a[k] for k in ("kv", "cross_kv", "state")
+                                  if k in a}
+        return (x, aux), capt if capture_kv else None
+
+    if cfg.encdec is not None:
+        stacked = {"blocks_v0": params["blocks_v0"]}
+        groups = cfg.n_layers
+    else:
+        stacked = {f"blocks_v{vi}": params[f"blocks_v{vi}"]
+                   for vi in range(len(pattern))}
+        groups = cfg.n_layers // len(pattern)
+
+    if cfg.scan_layers:
+        (x, aux), capt = jax.lax.scan(group_body, (x, aux_init), stacked)
+    else:
+        capts = []
+        aux = aux_init
+        for g in range(groups):
+            p_group = jax.tree_util.tree_map(lambda a: a[g], stacked)
+            (x, aux), c = group_body((x, aux), p_group)
+            capts.append(c)
+        capt = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *capts)
+                if capture_kv else None)
+
+    x = norm(x, params["ln_final"], cfg.norm_type)
+    aux = {k: v / max(cfg.n_layers, 1) for k, v in aux.items()}
+    if capture_kv:
+        aux["kv_stacks"] = capt
+    if cfg.encdec is not None:
+        aux["enc_out"] = enc_out
+    return x, prefix, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *,
+            policy: KernelPolicy = DEFAULT_POLICY):
+    """batch: {tokens, labels [, frontend]} -> (loss, metrics)."""
+    tokens = shard_act(batch["tokens"], "tokens")
+    x, prefix, aux = hidden_states(cfg, params, tokens,
+                                   frontend=batch.get("frontend"),
+                                   policy=policy)
+    x = x[:, prefix:, :]
+    table = params["embedding" if cfg.tie_embeddings else "unembed"]["table"]
+    nll_sum, n_tok = chunked_cross_entropy(
+        x, table, batch["labels"], chunk=cfg.loss_chunk
+    )
+    loss = nll_sum / jnp.maximum(n_tok, 1.0)
+    metrics = {"nll": loss, "tokens": n_tok}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux["aux_loss"]
+        metrics["moe_aux"] = aux["aux_loss"]
+        metrics["moe_drop"] = aux["drop_frac"]
+    metrics["loss"] = loss
+    return loss, metrics

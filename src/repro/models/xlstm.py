@@ -1,0 +1,400 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar
+memory, sequential scan). arXiv:2405.04517.
+
+mLSTM stabilized exponential gating:
+    m_t = max(logf_t + m_{t-1}, i_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Two implementations with *identical* semantics (tested equal):
+* ``mlstm_recurrent`` — lax.scan over time; decode + oracle.
+* ``mlstm_chunkwise`` — log-space cumulative gates inside a chunk (intra part
+  is a masked quadratic form, inter part through the carried (C, n, m) state).
+  Training memory is O(n_chunks * state), not O(L * state).
+
+The depthwise conv preactivations use the paper's DWConv-1d kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.core.dwconv import depthwise1d_causal, depthwise1d_step
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models.layers import init_linear, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_recurrent(q, k, v, igate, logf, state=None):
+    """q/k/v: (B, L, H, dh); igate/logf: (B, L, H). Returns (h, state).
+
+    state = (c (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    """
+    b, l, h, dh = q.shape
+    scale = dh ** -0.5
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp                     # (B,H,dh) / (B,H)
+        m_new = jnp.maximum(ft + m, it)
+        fac_f = jnp.exp(ft + m - m_new)[..., None]
+        fac_i = jnp.exp(it - m_new)[..., None]
+        c = fac_f[..., None] * c + fac_i[..., None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = fac_f * n + fac_i * kt
+        num = jnp.einsum("bhkv,bhk->bhv", c, qt * scale)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt * scale)),
+            jnp.exp(-m_new),
+        )
+        return (c, n, m_new), num / den[..., None]
+
+    tm = lambda x: jnp.moveaxis(x.astype(jnp.float32), 1, 0)  # time-major
+    (c, n, m), hs = jax.lax.scan(
+        step, state, (tm(q), tm(k), tm(v), tm(igate), tm(logf))
+    )
+    return jnp.moveaxis(hs, 0, 1), (c, n, m)
+
+
+def mlstm_step(q1, k1, v1, i1, f1, state):
+    """One decode step. q1/k1/v1 (B,H,dh); i1/f1 (B,H)."""
+    h, state = mlstm_recurrent(
+        q1[:, None], k1[:, None], v1[:, None], i1[:, None], f1[:, None],
+        state,
+    )
+    return h[:, 0], state
+
+
+def mlstm_chunkwise(q, k, v, igate, logf, *, chunk: int = 128, state=None):
+    """Chunkwise-parallel mLSTM, exactly equal to mlstm_recurrent."""
+    b, l, h, dh = q.shape
+    scale = dh ** -0.5
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        z3 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(x, z3) for x in (q, k, v))
+        igate = jnp.pad(igate, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=NEG_INF)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // chunk
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(b, nc, chunk, *x.shape[2:]), 1, 0
+        )
+
+    xs = tuple(to_chunks(x) for x in (q, k, v, igate, logf))
+
+    def body(carry, inp):
+        c0, n0, m0 = carry
+        qc, kc, vc, ic, fc = inp                    # (B, chunk, H, ...)
+        fcum = jnp.cumsum(fc, axis=1)               # F_i inclusive (B,c,H)
+        # intra log-decay D[i,j] = F_i - F_j + i_j  (j <= i)
+        d = (fcum[:, :, None] - fcum[:, None, :] + ic[:, None, :])
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        d = jnp.where(mask[None, :, :, None], d, NEG_INF)  # (B,c,c,H)
+        m_intra = d.max(axis=2)                            # (B,c,H)
+        m_inter = fcum + m0[:, None]                       # (B,c,H)
+        m_i = jnp.maximum(m_intra, m_inter)
+
+        s = jnp.einsum("bihd,bjhd->bijh", qc * scale, kc)  # (B,c,c,H)
+        w = s * jnp.exp(d - m_i[:, :, None])
+        num = jnp.einsum("bijh,bjhv->bihv", w, vc)
+        den = w.sum(axis=2)                                # (B,c,H)
+
+        inter_fac = jnp.exp(m_inter - m_i)                 # (B,c,H)
+        num = num + inter_fac[..., None] * jnp.einsum(
+            "bhkv,bihk->bihv", c0, qc * scale
+        )
+        den = den + inter_fac * jnp.einsum("bhk,bihk->bih", n0, qc * scale)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # state to next chunk
+        g = fcum[:, -1]                                    # (B,H) total decay
+        dk_ = g[:, None] - fcum + ic                       # (B,c,H)
+        m_new = jnp.maximum(g + m0, dk_.max(axis=1))
+        kfac = jnp.exp(dk_ - m_new[:, None])               # (B,c,H)
+        c_new = (jnp.exp(g + m0 - m_new)[..., None, None] * c0
+                 + jnp.einsum("bjh,bjhk,bjhv->bhkv", kfac, kc, vc))
+        n_new = (jnp.exp(g + m0 - m_new)[..., None] * n0
+                 + jnp.einsum("bjh,bjhk->bhk", kfac, kc))
+        return (c_new, n_new, m_new), hout
+
+    (c, n, m), hs = jax.lax.scan(body, state, xs)
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, dh)[:, :l]
+    return hout, (c, n, m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential; chunk-checkpointed scan)
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(zg, ig, fg, og, r_weights, *, state=None, chunk: int = 128):
+    """Gate preactivations zg/ig/fg/og: (B, L, H, dh). Recurrent weights
+    r_weights: (H, dh, 4*dh) block-diagonal per head. Returns (h, state)."""
+    b, l, h, dh = zg.shape
+    if state is None:
+        state = tuple(jnp.zeros((b, h, dh), jnp.float32) for _ in range(3)) \
+            + (jnp.full((b, h, dh), -jnp.inf, jnp.float32),)
+
+    def step(carry, inp):
+        c, n, hprev, m = carry
+        z_x, i_x, f_x, o_x = inp
+        rec = jnp.einsum("bhd,hde->bhe", hprev, r_weights)
+        z_r, i_r, f_r, o_r = jnp.split(rec, 4, axis=-1)
+        z = jnp.tanh(z_x + z_r)
+        o = jax.nn.sigmoid(o_x + o_r)
+        itil = i_x + i_r
+        ftil = jax.nn.log_sigmoid(f_x + f_r)
+        m_new = jnp.maximum(ftil + m, itil)
+        i_p = jnp.exp(itil - m_new)
+        f_p = jnp.exp(ftil + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        hnew = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, hnew, m_new), hnew
+
+    tm = lambda x: jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    xs = (tm(zg), tm(ig), tm(fg), tm(og))
+
+    chunk = min(chunk, l)
+    if l % chunk == 0 and l > chunk:
+        nc = l // chunk
+        xs_c = tuple(x.reshape(nc, chunk, *x.shape[1:]) for x in xs)
+
+        @jax.checkpoint
+        def chunk_step(carry, inp):
+            return jax.lax.scan(step, carry, inp)
+
+        state, hs = jax.lax.scan(chunk_step, state, xs_c)
+        hs = hs.reshape(l, *hs.shape[2:])
+    else:
+        state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def slstm_step(zg, ig, fg, og, r_weights, state):
+    """One decode step; gate preactivations (B, H, dh)."""
+    h, state = slstm_scan(zg[:, None], ig[:, None], fg[:, None],
+                          og[:, None], r_weights, state=state, chunk=1)
+    return h[:, 0], state
+
+
+# ---------------------------------------------------------------------------
+# Blocks (params + forward). mLSTM: pre-up-projection; sLSTM: post-FFN.
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, d_model: int, n_heads: int, cfg: XLSTMConfig,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    di = int(d_model * cfg.proj_factor)
+    dh = di // n_heads
+    return {
+        "norm": {"scale": jnp.zeros((d_model,), jnp.float32)},
+        "w_up": init_linear(ks[0], d_model, 2 * di, dtype=dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_k, di))
+                 * cfg.conv_k ** -0.5).astype(jnp.float32),
+        "w_q": init_linear(ks[2], di, di, dtype=dtype),
+        "w_k": init_linear(ks[3], di, di, dtype=dtype),
+        "w_v": init_linear(ks[4], di, di, dtype=dtype),
+        "w_gates": init_linear(ks[5], di, 2 * n_heads, bias=True, dtype=dtype),
+        "out_norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "w_down": init_linear(ks[6], di, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, xv, n_heads, policy):
+    b, l, di = xv.shape
+    dh = di // n_heads
+    xc = depthwise1d_causal(xv, p["conv"].astype(xv.dtype), policy=policy)
+    xc = jax.nn.silu(xc)
+    q = linear(p["w_q"], xc, policy=policy).reshape(b, l, n_heads, dh)
+    k = linear(p["w_k"], xc, policy=policy).reshape(b, l, n_heads, dh)
+    v = linear(p["w_v"], xv, policy=policy).reshape(b, l, n_heads, dh)
+    gates = linear(p["w_gates"], xc, policy=policy).astype(jnp.float32)
+    igate, fraw = jnp.split(gates, 2, axis=-1)            # (B,L,H)
+    logf = jax.nn.log_sigmoid(fraw)
+    return q, k, v, igate, logf
+
+
+def _conv_tail(x_pre, kc):
+    tail = x_pre[:, -(kc - 1):, :].astype(jnp.float32)
+    pad = (kc - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return tail
+
+
+def mlstm_block(p, x, *, n_heads: int, cfg: XLSTMConfig, chunk: int = 128,
+                policy: KernelPolicy = DEFAULT_POLICY,
+                return_cache: bool = False):
+    """x (B, L, d) -> (B, L, d) with residual."""
+    xn = rms_norm(x, p["norm"]["scale"])
+    up = linear(p["w_up"], xn, policy=policy)
+    xv, xz = jnp.split(up, 2, axis=-1)                    # (B,L,di)
+    q, k, v, igate, logf = _mlstm_qkv_gates(p, xv, n_heads, policy)
+    h, (c, n, m) = mlstm_chunkwise(q, k, v, igate, logf, chunk=chunk)
+    b, l, _, _ = q.shape
+    h = h.reshape(b, l, -1)
+    h = rms_norm(h.astype(x.dtype), p["out_norm"]["scale"])
+    h = h * jax.nn.silu(xz)
+    out = x + linear(p["w_down"], h, policy=policy)
+    if return_cache:
+        return out, {"c": c, "n": n, "m": m,
+                     "conv": _conv_tail(xv, cfg.conv_k)}
+    return out
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int,
+                     cfg: XLSTMConfig):
+    di = int(d_model * cfg.proj_factor)
+    dh = di // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, max(cfg.conv_k - 1, 1), di), jnp.float32),
+    }
+
+
+def mlstm_block_step(p, x_t, cache, *, n_heads: int, cfg: XLSTMConfig,
+                     policy: KernelPolicy = DEFAULT_POLICY):
+    """x_t (B, 1, d) -> (B, 1, d); cache from init_mlstm_cache."""
+    b = x_t.shape[0]
+    xn = rms_norm(x_t, p["norm"]["scale"])
+    up = linear(p["w_up"], xn, policy=policy)
+    xv, xz = jnp.split(up, 2, axis=-1)
+    conv_state, xc = depthwise1d_step(
+        cache["conv"].astype(xv.dtype), xv[:, 0], p["conv"].astype(xv.dtype)
+    )
+    xc = jax.nn.silu(xc)
+    di = xv.shape[-1]
+    dh = di // n_heads
+    q = linear(p["w_q"], xc, policy=policy).reshape(b, n_heads, dh)
+    k = linear(p["w_k"], xc, policy=policy).reshape(b, n_heads, dh)
+    v = linear(p["w_v"], xv[:, 0], policy=policy).reshape(b, n_heads, dh)
+    gates = linear(p["w_gates"], xc, policy=policy).astype(jnp.float32)
+    igate, fraw = jnp.split(gates, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(fraw)
+    h, (c, n, m) = mlstm_step(
+        q, k, v, igate, logf, (cache["c"], cache["n"], cache["m"])
+    )
+    h = h.reshape(b, 1, di)
+    h = rms_norm(h.astype(x_t.dtype), p["out_norm"]["scale"])
+    h = h * jax.nn.silu(xz)
+    out = x_t + linear(p["w_down"], h, policy=policy)
+    return out, {"c": c, "n": n, "m": m, "conv": conv_state.astype(jnp.float32)}
+
+
+def init_slstm_block(key, d_model: int, n_heads: int, cfg: XLSTMConfig,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    dh = d_model // n_heads
+    ff = int(d_model * 4 / 3 / 64) * 64 or d_model
+    return {
+        "norm": {"scale": jnp.zeros((d_model,), jnp.float32)},
+        "conv": (jax.random.normal(ks[0], (cfg.conv_k, d_model))
+                 * cfg.conv_k ** -0.5).astype(jnp.float32),
+        "w_gates": init_linear(ks[1], d_model, 4 * d_model, bias=True,
+                               dtype=dtype),
+        "r": (jax.random.normal(ks[2], (n_heads, dh, 4 * dh))
+              * dh ** -0.5).astype(jnp.float32),
+        "out_norm": {"scale": jnp.zeros((d_model,), jnp.float32)},
+        "ffn_norm": {"scale": jnp.zeros((d_model,), jnp.float32)},
+        "w_ff_gate": init_linear(ks[3], d_model, ff, dtype=dtype),
+        "w_ff_up": init_linear(ks[4], d_model, ff, dtype=dtype),
+        "w_ff_down": init_linear(ks[5], ff, d_model, dtype=dtype),
+    }
+
+
+def _slstm_gates(p, xn, n_heads, policy):
+    b, l, d = xn.shape
+    dh = d // n_heads
+    xc = depthwise1d_causal(xn, p["conv"].astype(xn.dtype), policy=policy)
+    xc = jax.nn.silu(xc)
+    gates = linear(p["w_gates"], xc, policy=policy).astype(jnp.float32)
+    zg, ig, fg, og = jnp.split(gates, 4, axis=-1)
+    reshape = lambda g: g.reshape(b, l, n_heads, dh)
+    return reshape(zg), reshape(ig), reshape(fg), reshape(og)
+
+
+def slstm_block(p, x, *, n_heads: int, cfg: XLSTMConfig, chunk: int = 128,
+                policy: KernelPolicy = DEFAULT_POLICY,
+                return_cache: bool = False):
+    b, l, d = x.shape
+    xn = rms_norm(x, p["norm"]["scale"])
+    zg, ig, fg, og = _slstm_gates(p, xn, n_heads, policy)
+    h, (c, n, hs, m) = slstm_scan(zg, ig, fg, og, p["r"], chunk=chunk)
+    h = h.reshape(b, l, d).astype(x.dtype)
+    x = x + rms_norm(h, p["out_norm"]["scale"])
+    # post-up-projection GLU FFN (part of the sLSTM block, factor 4/3)
+    xn2 = rms_norm(x, p["ffn_norm"]["scale"])
+    g = linear(p["w_ff_gate"], xn2, activation="silu", policy=policy)
+    u = linear(p["w_ff_up"], xn2, policy=policy)
+    out = x + linear(p["w_ff_down"], g * u, policy=policy)
+    if return_cache:
+        return out, {"c": c, "n": n, "h": hs, "m": m,
+                     "conv": _conv_tail(xn, cfg.conv_k)}
+    return out
+
+
+def init_slstm_cache(batch: int, d_model: int, n_heads: int,
+                     cfg: XLSTMConfig):
+    dh = d_model // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "h": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads, dh), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, max(cfg.conv_k - 1, 1), d_model),
+                          jnp.float32),
+    }
+
+
+def slstm_block_step(p, x_t, cache, *, n_heads: int, cfg: XLSTMConfig,
+                     policy: KernelPolicy = DEFAULT_POLICY):
+    b = x_t.shape[0]
+    d = x_t.shape[-1]
+    dh = d // n_heads
+    xn = rms_norm(x_t, p["norm"]["scale"])
+    conv_state, xc = depthwise1d_step(
+        cache["conv"].astype(xn.dtype), xn[:, 0], p["conv"].astype(xn.dtype)
+    )
+    xc = jax.nn.silu(xc)
+    gates = linear(p["w_gates"], xc, policy=policy).astype(jnp.float32)
+    zg, ig, fg, og = (g.reshape(b, n_heads, dh)
+                      for g in jnp.split(gates, 4, axis=-1))
+    h, (c, n, hs, m) = slstm_step(
+        zg, ig, fg, og, p["r"],
+        (cache["c"], cache["n"], cache["h"], cache["m"]),
+    )
+    h = h.reshape(b, 1, d).astype(x_t.dtype)
+    x = x_t + rms_norm(h, p["out_norm"]["scale"])
+    xn = rms_norm(x, p["ffn_norm"]["scale"])
+    g = linear(p["w_ff_gate"], xn, activation="silu", policy=policy)
+    u = linear(p["w_ff_up"], xn, policy=policy)
+    out = x + linear(p["w_ff_down"], g * u, policy=policy)
+    return out, {"c": c, "n": n, "h": hs, "m": m,
+                 "conv": conv_state.astype(jnp.float32)}

@@ -1,0 +1,198 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (per step):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+``compiled.cost_analysis()`` is the per-device SPMD program cost, so the
+"/ chips" in the spec formulas is already applied. collective bytes are
+parsed from the post-SPMD HLO text: we sum the result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with a 2x(n-1)/n ring factor for all-reduce and (n-1)/n for the others
+(n from the op's replica_groups when parseable).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one link direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _TYPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_V2_RE.search(line)    # replica_groups=[ngroups,size]
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)       # replica_groups={{0,1,2,...},...}
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals (per device) from HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result type is between '=' and the op name
+        for op in _COLLECTIVES:
+            m = re.search(rf"=\s*(.+?)\s+{op}(-start|-done)?\(", stripped)
+            if not m:
+                continue
+            if m.group(2) == "-done":     # avoid double count of async pair
+                continue
+            size = _shape_bytes(m.group(1))
+            n = _group_size(stripped) or 2
+            if op == "all-reduce":
+                moved = 2.0 * size * (n - 1) / n
+            else:
+                moved = 1.0 * size * (n - 1) / n
+            out[op] += moved
+            counts[op] += 1
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def memory_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: getattr(ma, k, None) for k in keys}
+
+
+def analyze(compiled, *, n_devices: int, model_flops_global: float,
+            label: str = "", group_compiled=None, trips: int = 1) -> dict:
+    """Full roofline record for one dry-run cell.
+
+    XLA cost_analysis counts a `while` (lax.scan) body ONCE, so a scanned
+    layer stack under-reports per-step cost by the trip count. When
+    ``group_compiled`` (the compiled single-layer-group program) is given,
+    per-step totals are reconstructed as
+
+        total = group_cost * trips + max(full_cost - group_cost, 0)
+
+    where the residual term covers everything outside the layer loop
+    (embedding, loss, optimizer, step-level collectives). Known remaining
+    undercounts (documented in EXPERIMENTS.md): inner scans *within* one
+    layer (blockwise-attention pair scan, CE chunk scan, whisper encoder
+    stack) are still counted once inside their program.
+    """
+    cost = cost_dict(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_total = coll["total"]
+    raw = {"flops": flops_dev, "bytes": bytes_dev, "coll": coll_total}
+    if group_compiled is not None and trips > 1:
+        gcost = cost_dict(group_compiled)
+        gcoll = parse_collectives(group_compiled.as_text())
+        gf = float(gcost.get("flops", 0.0))
+        gb = float(gcost.get("bytes accessed", 0.0))
+        gc = gcoll["total"]
+        flops_dev = gf * trips + max(flops_dev - gf, 0.0)
+        bytes_dev = gb * trips + max(bytes_dev - gb, 0.0)
+        coll_total = gc * trips + max(coll_total - gc, 0.0)
+        for k in _COLLECTIVES:
+            coll[k] = gcoll[k] * trips + max(coll[k] - gcoll[k], 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops_dev = model_flops_global / n_devices
+    mem = memory_dict(compiled)
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "label": label,
+        "n_devices": n_devices,
+        "trips": trips,
+        "raw_while_once": raw,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll["total"],
+        "collectives": {k: coll[k] for k in _COLLECTIVES},
+        "collective_counts": coll["counts"],
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": model_flops_global,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flop_ratio": (model_flops_dev / flops_dev
+                              if flops_dev else 0.0),
+        # fraction of the roofline achieved if the dominant term were the
+        # only cost (upper bound on achievable MFU for this lowering)
+        "roofline_mfu_bound": (model_flops_dev / PEAK_FLOPS) / bound
+        if bound else 0.0,
+        "memory_analysis": mem,
+    }
+
+
+def model_flops(cfg, shape_meta: dict) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens this step (global).
+
+    Training counts fwd+bwd (the 6x); decode counts one token per sequence
+    with the 2x inference factor (2*N*D) plus KV-attention read FLOPs are
+    negligible and excluded by convention.
+    """
+    kind = shape_meta["kind"]
+    b, s = shape_meta["global_batch"], shape_meta["seq_len"]
+    n = cfg.n_active_params()
+    if kind == "train":
+        return 6.0 * n * b * s
+    if kind == "prefill":
+        return 2.0 * n * b * s
+    return 2.0 * n * b  # decode: one token per sequence
+
+
+def save_record(record: dict, path: str):
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)

@@ -1,0 +1,40 @@
+"""Token samplers for the serving loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key, *, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> tokens (B,)."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(decode_step_fn, cache, first_tokens, n_steps: int, key,
+             *, temperature: float = 0.0, top_k: int = 0):
+    """Batched autoregressive generation loop (jit-compatible).
+
+    decode_step_fn(cache, tokens (B,1)) -> (logits (B,V), cache).
+    Returns (tokens (B, n_steps), cache).
+    """
+    def body(carry, k):
+        cache, tok = carry
+        logits, cache = decode_step_fn(cache, tok)
+        nxt = sample(logits, k, temperature=temperature, top_k=top_k)
+        return (cache, nxt[:, None]), nxt
+
+    keys = jax.random.split(key, n_steps)
+    (cache, _), toks = jax.lax.scan(body, (cache, first_tokens), keys)
+    return toks.T, cache

@@ -1,0 +1,229 @@
+"""Serving: cache construction, prefill, and the one-token decode step.
+
+``decode_step`` is what the decode_32k / long_500k dry-run cells lower: one
+new token against a seq_len-deep cache. The cache is a stacked-per-layer
+pytree scanned with the layer stack (HLO stays O(pattern period)).
+
+Prefill:
+* attention / enc-dec archs: one full forward with per-layer KV capture,
+  then scatter into the cache buffers (ring-aware for SWA layers).
+* ssm / hybrid archs: prefill-by-stepping (scan of decode steps over the
+  prompt) — state capture through the chunked scan is a listed perf TODO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models import transformer as T
+from repro.models.layers import embed, norm, unembed_logits
+from repro.sharding.rules import shard_act
+
+
+def _pattern(cfg: ModelConfig):
+    if cfg.encdec is not None:
+        return [T.LayerVariant(kind="dec")]
+    return T.layer_pattern(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Zeroed cache pytree. max_len includes any meta/fusion prefix."""
+    pattern = _pattern(cfg)
+    groups = cfg.n_layers // len(pattern)
+    cache: dict[str, Any] = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    for vi, variant in enumerate(pattern):
+        one = lambda key=None, v=variant: T.init_layer_cache(
+            cfg, v, batch, max_len
+        )
+        cache[f"v{vi}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one() for _ in range(groups)]
+        )
+    if cfg.encdec is not None:
+        dh, hkv = cfg.head_dim, cfg.n_kv_heads
+        cache["enc_k"] = jnp.zeros(
+            (groups, batch, cfg.encdec.enc_seq, hkv, dh), cfg.jax_dtype)
+        cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree of the cache (for the dry run)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *,
+                policy: KernelPolicy = DEFAULT_POLICY):
+    """tokens (B, 1) -> (logits (B, V) f32, new cache). pos from cache."""
+    pattern = _pattern(cfg)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed(params["embedding"], tokens)                  # (B,1,d)
+
+    stacked_p = {f"blocks_v{vi}": params[f"blocks_v{vi}"]
+                 for vi in range(len(pattern))}
+    stacked_c = {f"v{vi}": cache[f"v{vi}"] for vi in range(len(pattern))}
+    xs = (stacked_p, stacked_c)
+    if cfg.encdec is not None:
+        xs = (stacked_p, stacked_c,
+              {"enc_k": cache["enc_k"], "enc_v": cache["enc_v"]})
+
+    def body(x, inp):
+        if cfg.encdec is not None:
+            p_group, c_group, enc = inp
+            enc_kv = (enc["enc_k"], enc["enc_v"])
+        else:
+            p_group, c_group = inp
+            enc_kv = None
+        new_c = {}
+        for vi, variant in enumerate(pattern):
+            x, new_c[f"v{vi}"] = T.layer_decode(
+                p_group[f"blocks_v{vi}"], x, c_group[f"v{vi}"], pos, cfg,
+                variant, enc_kv=enc_kv, policy=policy,
+            )
+        return x, new_c
+
+    if cfg.scan_layers:
+        x, new_stacked = jax.lax.scan(body, x, xs)
+    else:
+        groups = cfg.n_layers // len(pattern)
+        outs = []
+        for g in range(groups):
+            inp = jax.tree_util.tree_map(lambda a: a[g], xs)
+            x, nc = body(x, inp)
+            outs.append(nc)
+        new_stacked = jax.tree_util.tree_map(
+            lambda *cs: jnp.stack(cs), *outs)
+
+    x = norm(x, params["ln_final"], cfg.norm_type)
+    table = params["embedding" if cfg.tie_embeddings else "unembed"]["table"]
+    logits = unembed_logits(x[:, 0], table)                  # (B, V) f32
+    new_cache = dict(cache)
+    new_cache.update(new_stacked)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _ring_fill(kv_full: jax.Array, s_c: int, sink: int, total: int):
+    """Scatter full-seq KV (B, S, H, dh) into a ring cache (B, s_c, H, dh)
+    matching attention_decode's slot function."""
+    s = kv_full.shape[1]
+    if s <= s_c:
+        pad = s_c - s
+        return jnp.pad(kv_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ring_len = s_c - sink
+    r = jnp.arange(s_c)
+    # latest position p < s with slot(p) == r
+    off = (jnp.maximum(r, sink) - sink)
+    base = s - 1 - ((s - 1 - sink - off) % ring_len)
+    p = jnp.where(r < sink, r, base)
+    return jnp.take(kv_full, p, axis=1)
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, max_len: int,
+            frontend=None, policy: KernelPolicy = DEFAULT_POLICY):
+    """Returns (last_logits (B, V), cache primed to pos = prefix + S).
+
+    One full forward with per-layer state capture: attention KV scattered
+    into (ring-aware) cache buffers; SSM/xLSTM recurrent states carried out
+    of the chunked scans directly.
+    """
+    pattern = _pattern(cfg)
+    b, s = tokens.shape
+    x, prefix, aux = T.hidden_states(cfg, params, tokens, frontend=frontend,
+                                     policy=policy, capture_kv=True)
+    total = prefix + s
+    cache = init_cache(cfg, b, max_len)
+    kv_stacks = aux["kv_stacks"]
+    for vi, variant in enumerate(pattern):
+        stack = kv_stacks[f"v{vi}"]
+        buf = cache[f"v{vi}"]
+        new_buf = dict(buf)
+        if "kv" in stack:
+            k_full, v_full = stack["kv"]                     # (G,B,S',Hkv,dh)
+            s_c = buf["k"].shape[2]
+            sink = variant.sink
+            fill = jax.vmap(lambda kv: _ring_fill(kv, s_c, sink, total))
+            new_buf["k"] = fill(k_full).astype(buf["k"].dtype)
+            new_buf["v"] = fill(v_full).astype(buf["v"].dtype)
+        if "state" in stack:
+            if variant.kind == "hymba":
+                new_buf["mamba"] = stack["state"]
+            else:                                            # mlstm / slstm
+                new_buf = stack["state"]
+        cache[f"v{vi}"] = new_buf
+        if cfg.encdec is not None and "cross_kv" in stack:
+            ck, cv = stack["cross_kv"]
+            cache["enc_k"] = ck.astype(cfg.jax_dtype)
+            cache["enc_v"] = cv.astype(cfg.jax_dtype)
+    cache["pos"] = jnp.full((b,), total, jnp.int32)
+    table = params["embedding" if cfg.tie_embeddings else "unembed"]["table"]
+    last_logits = unembed_logits(x[:, -1], table)
+    return last_logits, cache
+
+
+def prefill_by_stepping(cfg: ModelConfig, params, tokens, *, max_len: int,
+                        policy: KernelPolicy = DEFAULT_POLICY):
+    """Reference prefill: scan of decode steps. Oracle for prefill()."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta"][None], (b, cfg.meta_tokens, cfg.d_model)
+        ).astype(cfg.jax_dtype)
+        # run meta tokens through decode steps as a learned prefix
+        for i in range(cfg.meta_tokens):
+            _, cache = _embedded_decode_step(cfg, params, cache,
+                                             meta[:, i:i + 1], policy)
+
+    def body(carry, tok):
+        cache, _ = carry
+        logits, cache = decode_step(cfg, params, cache, tok[:, None],
+                                    policy=policy)
+        return (cache, logits), None
+
+    zl = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(body, (cache, zl), tokens.T)
+    return logits, cache
+
+
+def _embedded_decode_step(cfg, params, cache, x_embed, policy):
+    """decode_step but starting from an embedding (meta-token priming)."""
+    pattern = _pattern(cfg)
+    pos = cache["pos"]
+    x = x_embed
+    stacked_p = {f"blocks_v{vi}": params[f"blocks_v{vi}"]
+                 for vi in range(len(pattern))}
+    stacked_c = {f"v{vi}": cache[f"v{vi}"] for vi in range(len(pattern))}
+
+    def body(x, inp):
+        p_group, c_group = inp
+        new_c = {}
+        for vi, variant in enumerate(pattern):
+            x, new_c[f"v{vi}"] = T.layer_decode(
+                p_group[f"blocks_v{vi}"], x, c_group[f"v{vi}"], pos, cfg,
+                variant, policy=policy,
+            )
+        return x, new_c
+
+    x, new_stacked = jax.lax.scan(body, x, (stacked_p, stacked_c))
+    new_cache = dict(cache)
+    new_cache.update(new_stacked)
+    new_cache["pos"] = pos + 1
+    return None, new_cache

@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    current_rules,
+    param_specs,
+    shard_act,
+    use_rules,
+    zero1_specs,
+)
+
+__all__ = [
+    "ShardingRules",
+    "current_rules",
+    "param_specs",
+    "shard_act",
+    "use_rules",
+    "zero1_specs",
+]

@@ -1,0 +1,284 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Train mode (FSDP + TP + optional pod-DP):
+* 2-D weights are column-parallel by default: (in, out) -> P(fsdp, tp); the
+  "down"/output projections are row-parallel: (in, out) -> P(tp, fsdp).
+* Expert weights (E, ., .) -> P(tp, None, None) (expert parallelism; must
+  match the shard_map in_specs in models/moe.py). ZeRO-1 shards the matching
+  optimizer state further over the fsdp axis.
+* Embedding/unembedding table (V, d) -> P(tp, fsdp): vocab-sharded so the
+  (B, chunk, V) loss logits are sharded over tp.
+* Activations: batch over (pod, data); attention heads over tp when the head
+  count divides; KV caches: batch over data, sequence over tp
+  (flash-decoding style).
+
+Serve mode: TP only (no fsdp) — per-token weight all-gathers would dominate
+decode latency.
+
+A sharding "context" (plain module global, set by the launcher around
+lower/compile and around real execution) lets model code call
+``shard_act(x, kind)`` without threading mesh details everywhere. With no
+context, every helper is a no-op (CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Optional[Mesh]
+    batch_axes: tuple = ("data",)          # + "pod" on the multi-pod mesh
+    model_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = "data"      # None in serve mode
+    seq_axis: Optional[str] = None         # sequence-parallel activations
+    # experts may need the extra (data) axis even at serve time — a 400B
+    # expert tree does not fit TP-16 on v5e
+    expert_fsdp_axis: Optional[str] = None
+
+    @property
+    def expert_fsdp(self) -> Optional[str]:
+        return self.expert_fsdp_axis or self.fsdp_axis
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def fsdp_size(self) -> int:
+        if self.mesh is None or self.fsdp_axis is None:
+            return 1
+        return self.mesh.shape[self.fsdp_axis]
+
+
+_CURRENT: list[Optional[ShardingRules]] = [None]
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CURRENT[0]
+
+
+@contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = _CURRENT[0]
+    _CURRENT[0] = rules
+    try:
+        yield rules
+    finally:
+        _CURRENT[0] = prev
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    """Annotate an activation with its sharding. No-op without a context.
+
+    kinds: btd (B,S,d) · heads4 (B,S,H,dh) · cache (B,Smax,Hkv,dh) ·
+    logits (B,S,V) · tokens (B,S).
+    """
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    tp = r.model_axis
+    spec: P
+    if kind == "btd":
+        seq = r.seq_axis if (r.seq_axis and _div(x.shape[1], r.mesh.shape[r.seq_axis])) else None
+        spec = P(r.batch_axes, seq, None)
+    elif kind == "heads4":
+        h_ok = tp is not None and _div(x.shape[2], r.model_size)
+        spec = P(r.batch_axes, None, tp if h_ok else None, None)
+    elif kind == "cache":
+        s_ok = tp is not None and _div(x.shape[1], r.model_size)
+        spec = P(r.batch_axes, tp if s_ok else None, None, None)
+    elif kind == "q_decode":
+        # decode queries: heads replicated so the score contraction shards
+        # over the cache's sequence axis (flash-decoding); a heads-sharded q
+        # would force GSPMD to all-gather the whole KV cache per layer
+        spec = P(r.batch_axes, None, None, None)
+    elif kind == "scores_decode":
+        # (B, Hq, 1, S): pin S to the model axis so the partitioner computes
+        # scores where the cache lives instead of gathering f32 K/V
+        s_ok = tp is not None and _div(x.shape[-1], r.model_size)
+        spec = P(r.batch_axes, None, None, tp if s_ok else None)
+    elif kind == "logits":
+        v_ok = tp is not None and _div(x.shape[-1], r.model_size)
+        spec = P(r.batch_axes, None, tp if v_ok else None)
+    elif kind == "tokens":
+        spec = P(r.batch_axes, None)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-based)
+# ---------------------------------------------------------------------------
+
+_ROW_PARALLEL_KEYS = {"w_o", "w_down", "w_ff_down", "w_out", "w_dt"}
+_EXPERT_KEYS = {"w_gate_e", "w_up_e", "w_down_e"}
+_REPLICATED_PARENTS = {"router"}
+
+
+def _leaf_spec(path: tuple, leaf, rules: ShardingRules) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    tp, fsdp = rules.model_axis, rules.fsdp_axis
+    ndim = leaf.ndim
+    shape = leaf.shape
+
+    def tp_if(n):
+        return tp if (tp and _div(n, rules.model_size)) else None
+
+    def fsdp_if(n):
+        return fsdp if (fsdp and _div(n, rules.fsdp_size)) else None
+
+    # stacked-layer leading dim(s): strip and re-prepend None
+    lead = 0
+    core_spec = None
+
+    if name in _EXPERT_KEYS or parent in _EXPERT_KEYS:
+        # (., E, a, b) possibly layer-stacked: E -> tp (EP), dim1 -> fsdp.
+        # The shard_map in_specs (E only) re-gather dim1 per layer — that IS
+        # the FSDP all-gather.
+        lead = ndim - 3
+        ef = rules.expert_fsdp
+        ef_ok = ef and rules.mesh is not None and _div(
+            shape[lead + 1], rules.mesh.shape[ef])
+        core_spec = (tp_if(shape[lead]), ef if ef_ok else None, None)
+    elif parent in _REPLICATED_PARENTS or name in _REPLICATED_PARENTS:
+        return P(*([None] * ndim))
+    elif name == "table":  # embedding (V, d)
+        return P(tp_if(shape[0]), fsdp_if(shape[1]))
+    elif name == "w" or name == "b":
+        pname = parent
+        if ndim - (1 if name == "b" else 2) > 0:
+            lead = ndim - (1 if name == "b" else 2)
+        if name == "b":
+            if pname in _ROW_PARALLEL_KEYS:
+                core_spec = (None,)
+            else:
+                core_spec = (tp_if(shape[lead]),)
+        elif pname in _ROW_PARALLEL_KEYS:
+            core_spec = (tp_if(shape[lead]), fsdp_if(shape[lead + 1]))
+        else:
+            core_spec = (fsdp_if(shape[lead]), tp_if(shape[lead + 1]))
+    elif name == "conv":  # (K, D) depthwise filter: channel = tp (paper!)
+        lead = ndim - 2
+        core_spec = (None, tp_if(shape[lead + 1]))
+    elif name == "a_log":  # (di, N)
+        lead = ndim - 2
+        core_spec = (tp_if(shape[lead]), None)
+    elif name in ("d_skip", "dt_bias"):
+        lead = ndim - 1
+        core_spec = (tp_if(shape[lead]),)
+    elif name == "r":  # slstm recurrent (H, dh, 4dh)
+        lead = ndim - 3
+        core_spec = (tp_if(shape[lead]), None, None)
+    elif name == "meta":  # learnable meta tokens (n, d)
+        return P(*([None] * ndim))
+    else:  # norms, scalars
+        return P(*([None] * ndim))
+    return P(*([None] * lead), *core_spec)
+
+
+def param_specs(params, rules: ShardingRules):
+    """Pytree of PartitionSpec matching `params`."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, rules), params
+    )
+
+
+def zero1_specs(params, specs, rules: ShardingRules):
+    """Optimizer-state specs: param spec + fsdp sharding of the largest
+    currently-unsharded dim (ZeRO-1). Falls back to the param spec."""
+    fsdp = rules.fsdp_axis
+    if fsdp is None or rules.fsdp_size <= 1:
+        return specs
+
+    def upgrade(leaf, spec: P):
+        if leaf.ndim == 0:
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        if fsdp in parts:
+            return spec
+        # largest unsharded, fsdp-divisible dim
+        cands = [(leaf.shape[i], i) for i in range(leaf.ndim)
+                 if parts[i] is None and leaf.shape[i] % rules.fsdp_size == 0]
+        if not cands:
+            return spec
+        _, i = max(cands)
+        parts[i] = fsdp
+        return P(*parts)
+
+    return jax.tree_util.tree_map(upgrade, params, specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache input specs
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes_if(rules: ShardingRules, n: int):
+    total = 1
+    for a in rules.batch_axes:
+        total *= rules.mesh.shape[a]
+    return rules.batch_axes if (total > 1 and n % total == 0) else None
+
+
+def batch_pspecs(batch_tree, rules: ShardingRules):
+    """Specs for {tokens, labels, frontend, pos}: batch dim over data axes."""
+    def one(leaf):
+        bspec = _batch_axes_if(rules, leaf.shape[0])
+        return P(bspec, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_pspecs(cache_tree, rules: ShardingRules, stacked: bool = True):
+    """Decode-cache specs: batch over data axes; KV sequence over the model
+    axis (flash-decoding layout). stacked=True: leaves carry a leading
+    (n_layer_groups,) dim (the scan stack); False: per-group caches."""
+    tp = rules.model_axis
+    lead = 1 if stacked else 0
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        if name == "pos":
+            return P(_batch_axes_if(rules, leaf.shape[0]))
+        if leaf.ndim < 1 + lead:
+            return P(*([None] * leaf.ndim))
+        bspec = _batch_axes_if(rules, leaf.shape[lead])
+        pre = (None,) * lead
+        if name in ("k", "v", "enc_k", "enc_v") and leaf.ndim == 4 + lead:
+            seq = tp if (tp and _div(leaf.shape[lead + 1],
+                                     rules.model_size)) else None
+            return P(*pre, bspec, seq, None, None)
+        if (name in ("k_scale", "v_scale")) and leaf.ndim == 3 + lead:
+            seq = tp if (tp and _div(leaf.shape[lead + 1],
+                                     rules.model_size)) else None
+            return P(*pre, bspec, seq, None)
+        return P(*pre, bspec, *([None] * (leaf.ndim - 1 - lead)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,166 @@
+"""Checkpointing: sharded-agnostic, atomic, checksummed, async, elastic.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000123/
+        arrays.npz            # flat {path -> np.ndarray}, full (unsharded)
+        manifest.json         # step, keys, per-key sha256-prefix, data state
+      step_000123.COMMITTED   # atomic marker written last
+      latest                  # text file: last committed step
+
+Design points for the 1000+-node posture:
+* full (replicated-view) arrays — a reload under a *different* mesh/topology
+  reshapes transparently (elastic scaling); device_put with the new sharding
+  does the scatter.
+* atomic commit marker -> a job killed mid-save never corrupts `latest`
+  (restore scans for the newest COMMITTED step and verifies checksums).
+* async: `save_async` snapshots to host (jax.device_get) synchronously —
+  cheap — and writes in a background thread.
+* multi-host: only process 0 writes (jax.process_index() == 0); all arrays
+  are gathered via device_get on the addressable replica (single-host here).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = SEP.join(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path
+        )
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _checksum(a: np.ndarray) -> str:
+    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
+
+
+class Checkpointer:
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, state, extra: Optional[dict] = None,
+             blocking: bool = True):
+        host_state = jax.device_get(state)  # snapshot now; write later
+        if blocking:
+            self._write(step, host_state, extra or {})
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state, extra or {}),
+                daemon=True,
+            )
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, state, extra: dict):
+        if jax.process_index() != 0:
+            return
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "extra": extra,
+            "checksums": {k: _checksum(v) for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, name + ".COMMITTED"), "w") as f:
+            f.write(str(step))
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(name)
+        os.replace(os.path.join(self.dir, "latest.tmp"),
+                   os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.committed_steps())
+        for s in steps[: -self.keep]:
+            name = f"step_{s:09d}"
+            shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+            try:
+                os.remove(os.path.join(self.dir, name + ".COMMITTED"))
+            except FileNotFoundError:
+                pass
+
+    # -------------------------------------------------------------- restore
+    def committed_steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.endswith(".COMMITTED"):
+                out.append(int(fn[len("step_"):-len(".COMMITTED")]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> tuple[Any, int, dict]:
+        """Returns (state, step, extra). Verifies checksums; falls back to
+        the previous committed step on corruption."""
+        steps = self.committed_steps()
+        if step is not None:
+            steps = [s for s in steps if s <= step]
+        while steps:
+            s = steps.pop()
+            name = f"step_{s:09d}"
+            try:
+                with open(os.path.join(self.dir, name, "manifest.json")) as f:
+                    manifest = json.load(f)
+                with np.load(os.path.join(self.dir, name, "arrays.npz")) as z:
+                    flat = {k: z[k] for k in z.files}
+                for k, v in flat.items():
+                    if _checksum(v) != manifest["checksums"][k]:
+                        raise IOError(f"checksum mismatch at {k}")
+                state = _unflatten_into(template, flat)
+                if shardings is not None:
+                    state = jax.device_put(state, shardings)
+                return state, manifest["step"], manifest.get("extra", {})
+            except Exception as e:  # corrupted -> try previous
+                print(f"[ckpt] step {s} unusable ({e}); trying previous")
+        raise FileNotFoundError(f"no usable checkpoint in {self.dir}")

@@ -1,0 +1,98 @@
+"""The jitted training step: loss -> grads -> (compress) -> AdamW update.
+
+Microbatch gradient accumulation (sequential lax.scan over microbatches —
+the standard memory/throughput knob) and donation of params/opt-state
+buffers. Sharding comes from the in/out shardings the launcher attaches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compress import CompressionConfig, compress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    compression: CompressionConfig = CompressionConfig()
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    policy: KernelPolicy = DEFAULT_POLICY):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, [err]}; batch = {tokens, labels [, frontend]}.
+    """
+
+    def loss_of(params, batch):
+        return T.loss_fn(cfg, params, batch, policy=policy)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def accumulate(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        mb = tcfg.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            assert b % mb == 0, (b, mb)
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        mbatches = jax.tree_util.tree_map(split, batch)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(carry, mbatch):
+            loss_sum, grads = carry
+            (loss, metrics), g = grad_fn(params, mbatch)
+            grads = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), grads, g
+            )
+            return (loss_sum + loss, grads), metrics
+
+        (loss_sum, grads), ms = jax.lax.scan(
+            body, (jnp.float32(0.0), zero_g), mbatches
+        )
+        grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        return loss_sum / mb, metrics, grads
+
+    def train_step(state, batch, rng=None):
+        params, opt = state["params"], state["opt"]
+        loss, metrics, grads = accumulate(params, batch)
+        if tcfg.compression.kind != "none":
+            grads, err = compress(grads, state["err"], tcfg.compression,
+                                  key=rng)
+        params, opt, opt_metrics = adamw.apply_updates(
+            params, grads, opt, tcfg.optimizer
+        )
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        new_state = {"params": params, "opt": opt}
+        if tcfg.compression.kind != "none":
+            new_state["err"] = err
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = T.init_params(cfg, key)
+    state = {"params": params,
+             "opt": adamw.init_state(params, tcfg.optimizer)}
+    if tcfg.compression.kind != "none":
+        from repro.optim.compress import init_error
+        state["err"] = init_error(params)
+    return state

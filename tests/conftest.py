@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single host device (the 512-device override is ONLY for
+# launch/dryrun.py). Make repo sources importable without install.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

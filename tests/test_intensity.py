@@ -1,0 +1,71 @@
+"""The paper's analytical claims, validated exactly (reproduction gate)."""
+import math
+
+import pytest
+
+from repro.core import intensity as it
+
+
+def test_tflite_dw_plain_is_one_eighth():
+    assert it.t_tf_dw() == pytest.approx(1 / 8)
+
+
+@pytest.mark.parametrize("w_ob", [1, 2, 4, 8, 64])
+def test_tflite_dw_below_one_sixth(w_ob):
+    """Paper: T_tf < 1/6 even with the benefit-of-the-doubt variant."""
+    assert it.t_tf_dw(w_ob) < 1 / 6
+
+
+@pytest.mark.parametrize("hf,wf,lower", [(3, 3, 9 / 22), (5, 5, 25 / 54)])
+def test_ours_dw_asymptotic_bound(hf, wf, lower):
+    """Paper: T^DW = HfWf/((2+HfWf)*2) >= 9/22 for 3x3."""
+    assert it.t_ours_dw_asymptotic(hf, wf) == pytest.approx(lower)
+    assert it.t_ours_dw_asymptotic(hf, wf) >= 9 / 22 - 1e-12
+
+
+def test_ours_dw_eq1_converges_to_asymptotic():
+    full = it.t_ours_dw(3, 3, 2, 2, 112, 112)
+    asym = it.t_ours_dw_asymptotic(3, 3)
+    assert abs(full - asym) < 1e-3
+
+
+def test_ours_dw_beats_tflite_by_paper_margin():
+    # >= (9/22) / (1/6) = 2.45x better AI
+    assert it.t_ours_dw_asymptotic(3, 3) / it.t_tf_dw(4) > 2.4
+
+
+def test_rtrd_vs_rtra_ratio_approaches_1p5():
+    """Paper: T_RTRD ~= 1.5 x T_RTRA for large Ci, Co."""
+    r = it.t_rtrd_pw(ci=4096) / it.t_rtra_pw(co=4096)
+    assert 1.45 < r < 1.55
+    # and exact paper numbers at the paper's block sizes
+    assert it.t_rtra_pw(8, 8, 4, co=10**9) == pytest.approx(4 / 3, rel=1e-6)
+    assert it.t_rtrd_pw(8, 8, 4, ci=10**9) == pytest.approx(2.0, rel=1e-6)
+
+
+def test_vmem_translation_rtrd_beats_rtra():
+    """TPU-level: output-stationary traffic < A-stationary traffic for the
+    paper's PWConv layer shapes (MobileNetV1 P2: G=12544, Ci=64, Co=128)."""
+    rtrd = it.pwconv_traffic_rtrd(12544, 64, 128, 256, 256, 256)
+    rtra = it.pwconv_traffic_rtra(12544, 64, 128, 256, 256, 256)
+    assert rtrd.bytes_hbm < rtra.bytes_hbm
+    assert rtrd.intensity > rtra.intensity
+
+
+def test_dwconv_traffic_is_information_floor():
+    t = it.dwconv2d_traffic(1, 112, 112, 32, 3, 3, 1)
+    floor = 4 * (112 * 112 * 32 + 3 * 3 * 32 + 110 * 110 * 32)
+    assert t.bytes_hbm == floor
+
+
+def test_rowpar_traffic_exceeds_channelpar():
+    """The paper's core-inscalability claim, as traffic: row-parallel
+    partitioning moves strictly more bytes and the gap grows with p."""
+    ours = it.dwconv2d_traffic(1, 56, 56, 128, 3, 3, 1)
+    prev = None
+    for p in (1, 2, 4, 8):
+        tf = it.dwconv2d_traffic_rowpar(1, 56, 56, 128, 3, 3, 1, p=p)
+        assert tf.bytes_hbm >= ours.bytes_hbm
+        if prev is not None:
+            assert tf.bytes_hbm >= prev
+        prev = tf.bytes_hbm

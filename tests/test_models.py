@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced configs): forward/train step on CPU
+with shape + finiteness assertions, and prefill/decode logit parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, input_specs, shape_skip_reason
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.models.layers import unembed_logits
+from repro.serve import serve_step as S
+
+B, SQ = 2, 16
+
+
+def _batch(cfg, key=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(key), (B, SQ), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm" or (cfg.fusion_tokens and cfg.family == "moe"):
+        batch["frontend"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.fusion_tokens, cfg.d_model),
+            cfg.jax_dtype)
+    if cfg.encdec is not None:
+        batch["frontend"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encdec.enc_seq, cfg.d_model),
+            cfg.jax_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    x, prefix, aux = T.hidden_states(cfg, params, batch["tokens"],
+                                     frontend=batch.get("frontend"))
+    assert x.shape == (B, prefix + SQ, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+    loss, metrics = jax.jit(lambda p, b: T.loss_fn(cfg, p, b))(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # random-init loss should be ~ln(V)
+    assert abs(float(metrics["nll"]) - np.log(cfg.vocab_size)) < 1.5
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    from repro.train.train_step import TrainConfig, init_train_state, \
+        make_train_step
+    cfg = get_config(arch, smoke=True)
+    tcfg = TrainConfig(microbatches=2)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert bool(jnp.isfinite(m2["loss"]))
+    assert float(m2["grad_norm"]) > 0
+    # two steps on the same batch should reduce its loss
+    assert float(m2["loss"]) < float(m1["loss"]) + 1e-3
+    assert int(state["opt"]["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_parity(arch):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+    x, prefix, _ = T.hidden_states(cfg, params, tokens,
+                                   frontend=batch.get("frontend"))
+    table = params["embedding" if cfg.tie_embeddings else "unembed"]["table"]
+    ref = unembed_logits(x[:, prefix:], table)
+    half = SQ // 2
+    last, cache = S.prefill(cfg, params, tokens[:, :half], max_len=64,
+                            frontend=batch.get("frontend"))
+    errs = [float(jnp.abs(last - ref[:, half - 1]).max())]
+    for t in range(half, SQ):
+        logits, cache = S.decode_step(cfg, params, cache, tokens[:, t:t + 1])
+        errs.append(float(jnp.abs(logits - ref[:, t]).max()))
+    assert max(errs) < 5e-4, errs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        if shape_skip_reason(cfg, shape):
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        meta = SHAPES[shape]
+        if meta["kind"] == "decode":
+            assert specs["tokens"].shape == (meta["global_batch"], 1)
+        else:
+            assert specs["tokens"].shape == (meta["global_batch"],
+                                             meta["seq_len"])
+
+
+def test_long_500k_skips_are_exactly_the_full_attention_archs():
+    skipped = {a for a in ARCH_IDS
+               if shape_skip_reason(get_config(a), "long_500k")}
+    assert skipped == set(ARCH_IDS) - {"xlstm-125m", "hymba-1.5b"}
+
+
+def test_param_count_sanity():
+    """Analytical counts close to the names on the tin."""
+    expect = {
+        "xlstm-125m": (0.05e9, 0.25e9),
+        "smollm-360m": (0.3e9, 0.45e9),
+        "qwen3-1.7b": (1.4e9, 2.1e9),
+        "command-r-35b": (25e9, 40e9),
+        "qwen1.5-110b": (95e9, 125e9),
+        "qwen3-moe-235b-a22b": (210e9, 260e9),
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo < n < hi, (arch, n)
+
+
+def test_int8_kv_cache_decode_accuracy():
+    """Quantized KV cache tracks the full forward within ~1% rel error."""
+    import dataclasses
+    cfg = get_config("smollm-360m", smoke=True)
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 0,
+                                cfg.vocab_size)
+    x, prefix, _ = T.hidden_states(cfg, params, tokens)
+    ref = unembed_logits(x, params["embedding"]["table"])
+    cache = S.init_cache(cfgq, B, 64)
+    assert cache["v0"]["k"].dtype == jnp.int8
+    for t in range(12):
+        logits, cache = S.decode_step(cfgq, params, cache,
+                                      tokens[:, t:t + 1])
+        rel = float(jnp.abs(logits - ref[:, t]).max()
+                    / jnp.abs(ref[:, t]).max())
+        assert rel < 0.03, (t, rel)
+
+
+def test_smoke_params_match_analytical_scaling():
+    """Smoke config param count within 2x of the analytical formula (the
+    formula ignores norms/small biases)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        real = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        pred = cfg.n_params()
+        assert 0.4 < real / pred < 2.5, (arch, real, pred)

@@ -1,0 +1,242 @@
+"""Sharding rules, roofline HLO parsing, and multi-device DP/TP equivalence
+(the latter via subprocess with forced host devices)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.roofline.analysis import (ICI_BW, PEAK_FLOPS, analyze,
+                                     model_flops, parse_collectives)
+from repro.sharding.rules import (ShardingRules, param_specs, shard_act,
+                                  use_rules, zero1_specs)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _rules(fsdp="data"):
+    return ShardingRules(mesh=_FakeMesh({"data": 16, "model": 16}),
+                         batch_axes=("data",), model_axis="model",
+                         fsdp_axis=fsdp)
+
+
+def test_param_specs_shard_every_big_tensor():
+    cfg = get_config("qwen3-1.7b")
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(shapes, _rules())
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    sflat = {tuple(str(k) for k in p): s for p, s in flat}
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for (path, leaf), (_, spec) in zip(leaves, flat):
+        if leaf.size >= 1 << 20:  # every >=1M-element tensor must be sharded
+            assert any(a is not None for a in spec), (path, leaf.shape, spec)
+
+
+def test_param_specs_divisibility():
+    """Specs never shard a non-divisible dim."""
+    for arch in ("qwen3-moe-235b-a22b", "hymba-1.5b", "command-r-35b"):
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        rules = _rules()
+        specs = param_specs(shapes, rules)
+
+        def check(leaf, spec):
+            for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * 9):
+                if axis is not None:
+                    size = 16
+                    assert dim % size == 0, (leaf.shape, spec)
+        jax.tree_util.tree_map(check, shapes, specs,
+                               is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_zero1_upgrades_unsharded_dims():
+    cfg = get_config("smollm-360m", smoke=True)
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    rules = ShardingRules(mesh=_FakeMesh({"data": 2, "model": 1}),
+                          batch_axes=("data",), model_axis=None,
+                          fsdp_axis="data")
+    specs = param_specs(shapes, rules)
+    z = zero1_specs(shapes, specs, rules)
+    flat_s = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda s: tuple(s), specs,
+                               is_leaf=lambda s: isinstance(s, P)))
+    n_sharded_before = sum("data" in s for s in flat_s)
+    flat_z = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda s: tuple(s), z,
+                               is_leaf=lambda s: isinstance(s, P)))
+    n_sharded_after = sum("data" in s for s in flat_z)
+    assert n_sharded_after > n_sharded_before
+
+
+def test_shard_act_noop_without_context():
+    x = jnp.zeros((4, 8, 16))
+    assert shard_act(x, "btd") is x
+
+
+# ---------------------------------------------------------------------------
+# Roofline parsing
+# ---------------------------------------------------------------------------
+
+HLO_FIXTURE = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,512,128]{2,1,0} parameter(0)
+  %ag = bf16[16,512,2048]{2,1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={2}
+  %ar = f32[1024]{0} all-reduce(%c), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%d), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = bf16[8,128,64]{2,1,0} all-to-all(%e), replica_groups=[16,16]<=[256]
+  %cp = f32[256]{0} collective-permute(%f), source_target_pairs={{0,1}}
+  %ard = f32[12]{0} all-reduce-done(%ar)
+}
+"""
+
+
+def test_parse_collectives_fixture():
+    res = parse_collectives(HLO_FIXTURE)
+    ag = 16 * 512 * 2048 * 2 * (15 / 16)
+    ar = 1024 * 4 * 2 * (3 / 4)
+    rs = 64 * 32 * 4 * (15 / 16)
+    a2a = 8 * 128 * 64 * 2 * (15 / 16)
+    cp = 256 * 4 * (1 / 2)
+    assert res["all-gather"] == pytest.approx(ag)
+    assert res["all-reduce"] == pytest.approx(ar)
+    assert res["reduce-scatter"] == pytest.approx(rs)
+    assert res["all-to-all"] == pytest.approx(a2a)
+    assert res["collective-permute"] == pytest.approx(cp)
+    assert res["counts"]["all-reduce"] == 1  # -done not double-counted
+
+
+def test_model_flops_conventions():
+    cfg = get_config("qwen3-1.7b")
+    tr = model_flops(cfg, {"kind": "train", "global_batch": 256,
+                           "seq_len": 4096})
+    assert tr == pytest.approx(6 * cfg.n_params() * 256 * 4096)
+    de = model_flops(cfg, {"kind": "decode", "global_batch": 128,
+                           "seq_len": 32768})
+    assert de == pytest.approx(2 * cfg.n_params() * 128)
+
+
+def test_analyze_end_to_end_tiny():
+    """analyze() on a real compiled 4-device program finds the all-reduce."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.roofline.analysis import analyze
+mesh = jax.make_mesh((4,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+w = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+with mesh:
+    f = jax.jit(lambda x, w: x @ w,
+                in_shardings=(NamedSharding(mesh, P(None, "model")),
+                              NamedSharding(mesh, P("model", None))))
+    compiled = f.lower(x, w).compile()
+rec = analyze(compiled, n_devices=4, model_flops_global=2*128*256*64)
+assert rec["collective_bytes_per_device"] > 0, "expected an all-reduce"
+assert rec["hlo_flops_per_device"] > 0
+print("ANALYZE-OK", rec["dominant"])
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=REPO, env=env, timeout=300)
+    assert "ANALYZE-OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# Multi-device DP/TP equivalence (subprocess, 8 fake host devices)
+# ---------------------------------------------------------------------------
+
+
+def test_dp_tp_loss_matches_single_device():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.launch.dryrun import make_rules
+from repro.sharding.rules import use_rules, param_specs, batch_pspecs, named
+
+cfg = get_config("qwen3-1.7b", smoke=True)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": tokens, "labels": tokens}
+loss1, _ = jax.jit(lambda p, b: T.loss_fn(cfg, p, b))(params, batch)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = make_rules(mesh, mode="train", multi_pod=False)
+with use_rules(rules), mesh:
+    pspecs = named(mesh, param_specs(params, rules))
+    bspecs = named(mesh, batch_pspecs(batch, rules))
+    p_sh = jax.device_put(params, pspecs)
+    b_sh = jax.device_put(batch, bspecs)
+    loss8, _ = jax.jit(lambda p, b: T.loss_fn(cfg, p, b))(p_sh, b_sh)
+np.testing.assert_allclose(float(loss1), float(loss8), rtol=2e-5)
+print("DPTP-OK", float(loss1), float(loss8))
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=REPO, env=env, timeout=600)
+    assert "DPTP-OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_elastic_reshard_roundtrip():
+    """Checkpoint written under 1 device restores under 8 (elastic)."""
+    code = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.launch.dryrun import make_rules
+from repro.sharding.rules import use_rules, param_specs, named
+from repro.train.checkpoint import Checkpointer
+
+cfg = get_config("smollm-360m", smoke=True)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+d = tempfile.mkdtemp()
+ck = Checkpointer(d)
+ck.save(1, {"params": params})
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = make_rules(mesh, mode="train", multi_pod=False)
+shardings = named(mesh, {"params": param_specs(params, rules)})
+restored, step, _ = ck.restore({"params": params}, shardings=shardings)
+for a, b in zip(jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(restored["params"])):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("ELASTIC-OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=REPO, env=env, timeout=600)
+    assert "ELASTIC-OK" in out.stdout, out.stdout + out.stderr

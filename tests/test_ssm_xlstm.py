@@ -1,0 +1,156 @@
+"""Recurrent-family equivalences: chunked scan == stepwise recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SSMConfig, XLSTMConfig
+from repro.models import ssm, xlstm
+
+
+# ---------------------------------------------------------------------------
+# Selective scan (Mamba)
+# ---------------------------------------------------------------------------
+
+
+def test_mamba_full_vs_steps():
+    cfg = SSMConfig(d_state=8, conv_k=4, expand=2, chunk=16)
+    d = 20
+    p = ssm.init_mamba(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, d)) * 0.5
+    y_full, cache = ssm.mamba_mixer(p, x, cfg, return_state=True)
+    state = ssm.init_mamba_state(2, d, cfg)
+    ys = []
+    for t in range(50):
+        y_t, state = ssm.mamba_mixer_step(p, x[:, t:t + 1], state, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_full, rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(state["h"], cache["h"], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(state["conv"], cache["conv"], rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_selective_scan_chunk_invariance(chunk, seed):
+    r = np.random.default_rng(seed)
+    nb, l, di, n = 1, 33, 6, 4
+    u = jnp.asarray(r.normal(size=(nb, l, di)).astype(np.float32))
+    dt = jnp.asarray(r.uniform(0.01, 0.2, size=(nb, l, di)).astype(np.float32))
+    a = -jnp.asarray(r.uniform(0.5, 2.0, size=(di, n)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(nb, l, n)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(nb, l, n)).astype(np.float32))
+    dskip = jnp.ones((di,))
+    y1, h1 = ssm.selective_scan(u, dt, a, b, c, dskip, chunk=chunk)
+    y2, h2 = ssm.selective_scan(u, dt, a, b, c, dskip, chunk=l)
+    np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(h1, h2, rtol=2e-5, atol=2e-5)
+
+
+def test_selective_scan_decay_property():
+    """With B=0 the state decays: y == D*u exactly."""
+    nb, l, di, n = 1, 10, 3, 2
+    u = jnp.ones((nb, l, di))
+    dt = jnp.full((nb, l, di), 0.1)
+    a = -jnp.ones((di, n))
+    b = jnp.zeros((nb, l, n))
+    c = jnp.ones((nb, l, n))
+    d = 2.0 * jnp.ones((di,))
+    y, h = ssm.selective_scan(u, dt, a, b, c, d, chunk=4)
+    np.testing.assert_allclose(y, 2.0 * u, rtol=1e-6)
+    np.testing.assert_allclose(h, 0.0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_inputs(b=2, l=40, h=3, dh=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, l, h, dh))
+    k = jax.random.normal(ks[1], (b, l, h, dh))
+    v = jax.random.normal(ks[2], (b, l, h, dh))
+    ig = jax.random.normal(ks[3], (b, l, h)) * 2
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, l, h)) * 2)
+    return q, k, v, ig, lf
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 40])
+def test_mlstm_chunkwise_equals_recurrent(chunk):
+    q, k, v, ig, lf = _mlstm_inputs()
+    h_rec, st_rec = xlstm.mlstm_recurrent(q, k, v, ig, lf)
+    h_ch, st_ch = xlstm.mlstm_chunkwise(q, k, v, ig, lf, chunk=chunk)
+    np.testing.assert_allclose(h_rec, h_ch, rtol=2e-4, atol=2e-4)
+    for a, b in zip(st_rec, st_ch):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_state_threading():
+    """Running two halves with carried state == one full pass."""
+    q, k, v, ig, lf = _mlstm_inputs(l=32)
+    h_full, _ = xlstm.mlstm_chunkwise(q, k, v, ig, lf, chunk=8)
+    h1, st = xlstm.mlstm_chunkwise(q[:, :16], k[:, :16], v[:, :16],
+                                   ig[:, :16], lf[:, :16], chunk=8)
+    h2, _ = xlstm.mlstm_chunkwise(q[:, 16:], k[:, 16:], v[:, 16:],
+                                  ig[:, 16:], lf[:, 16:], chunk=8, state=st)
+    np.testing.assert_allclose(jnp.concatenate([h1, h2], 1), h_full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_block_decode_parity():
+    cfg = XLSTMConfig(conv_k=4, proj_factor=2.0)
+    d, nh, b, l = 24, 2, 2, 20
+    p = xlstm.init_mlstm_block(jax.random.PRNGKey(7), d, nh, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (b, l, d)) * 0.5
+    y_full = xlstm.mlstm_block(p, x, n_heads=nh, cfg=cfg, chunk=8)
+    cache = xlstm.init_mlstm_cache(b, d, nh, cfg)
+    ys = []
+    for t in range(l):
+        y_t, cache = xlstm.mlstm_block_step(p, x[:, t:t + 1], cache,
+                                            n_heads=nh, cfg=cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_full, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_slstm_block_decode_parity():
+    cfg = XLSTMConfig(conv_k=4)
+    d, nh, b, l = 24, 2, 2, 20
+    p = xlstm.init_slstm_block(jax.random.PRNGKey(9), d, nh, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (b, l, d)) * 0.5
+    y_full = xlstm.slstm_block(p, x, n_heads=nh, cfg=cfg, chunk=5)
+    cache = xlstm.init_slstm_cache(b, d, nh, cfg)
+    ys = []
+    for t in range(l):
+        y_t, cache = xlstm.slstm_block_step(p, x[:, t:t + 1], cache,
+                                            n_heads=nh, cfg=cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_full, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_slstm_checkpointed_scan_matches_plain():
+    """Chunk-checkpointed scan must not change values."""
+    b, l, h, dh = 1, 24, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    gates = [jax.random.normal(ks[i], (b, l, h, dh)) for i in range(4)]
+    r = jax.random.normal(ks[4], (h, dh, 4 * dh)) * 0.2
+    h1, _ = xlstm.slstm_scan(*gates, r, chunk=l)       # plain
+    h2, _ = xlstm.slstm_scan(*gates, r, chunk=8)       # checkpointed
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+
+
+def test_mlstm_grads_finite_through_chunkwise():
+    q, k, v, ig, lf = _mlstm_inputs(l=24)
+
+    def loss(q, k, v, ig, lf):
+        h, _ = xlstm.mlstm_chunkwise(q, k, v, ig, lf, chunk=8)
+        return jnp.sum(h ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, ig, lf)
+    for x in g:
+        assert bool(jnp.all(jnp.isfinite(x)))
+        assert float(jnp.linalg.norm(x)) > 0

@@ -1,0 +1,256 @@
+"""Training substrate: convergence, checkpoint/restore, fault tolerance,
+data determinism, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, DataIterator, _batch_np
+from repro.optim import adamw
+from repro.optim.compress import CompressionConfig, compress, init_error
+from repro.train.checkpoint import Checkpointer
+from repro.train.train_step import TrainConfig, init_train_state, \
+    make_train_step
+from repro.train.trainer import FaultInjector, LoopConfig, train_loop
+
+
+def _tiny():
+    cfg = get_config("smollm-360m", smoke=True)
+    tcfg = TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=1e-2, warmup_steps=2,
+                                    total_steps=100, weight_decay=0.0),
+    )
+    return cfg, tcfg
+
+
+def _dcfg(cfg, steps=64, bs=4, seq=32):
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=bs, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# Convergence
+# ---------------------------------------------------------------------------
+
+
+def test_loss_decreases_on_structured_data():
+    cfg, tcfg = _tiny()
+    dcfg = _dcfg(cfg)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    it = DataIterator(dcfg, prefetch=0)
+    losses = []
+    for _ in range(40):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.5, (first, last)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg, _ = _tiny()
+    dcfg = _dcfg(cfg)
+    a = _batch_np(dcfg, step=5)
+    b = _batch_np(dcfg, step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    it = DataIterator(dcfg, prefetch=0)
+    for _ in range(3):
+        next(it)
+    st = it.state()
+    b1 = next(it)
+    it2 = DataIterator.restore(dcfg, st, prefetch=0)
+    b2 = next(it2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_shards_are_disjoint_and_partition_the_batch():
+    cfg, _ = _tiny()
+    dcfg = _dcfg(cfg, bs=8)
+    full = _batch_np(dcfg, step=3, shard=0, n_shards=1)
+    parts = [_batch_np(dcfg, step=3, shard=i, n_shards=4) for i in range(4)]
+    assert all(p["tokens"].shape[0] == 2 for p in parts)
+    # shards cannot repeat each other (statistically distinct streams)
+    assert not np.array_equal(parts[0]["tokens"], parts[1]["tokens"])
+
+
+def test_data_has_learnable_structure():
+    cfg, _ = _tiny()
+    dcfg = _dcfg(cfg)
+    b = _batch_np(dcfg, step=0)
+    t, l = b["tokens"], b["labels"]
+    # the structured positions are predictable: anchor+j appears periodically
+    period = dcfg.structure
+    preds = (t[:, 0::period][:, : l[:, 0::period].shape[1]])
+    assert t.min() >= 0 and t.max() < cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    cfg, tcfg = _tiny()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(3, state, extra={"data": {"step": 3}})
+    restored, step, extra = ck.restore(state)
+    assert step == 3 and extra["data"]["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    cfg, tcfg = _tiny()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, state)
+    assert ck.committed_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    cfg, tcfg = _tiny()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, state)
+    ck.save(2, state)
+    # corrupt the newest arrays file
+    with open(os.path.join(str(tmp_path), "step_000000002", "arrays.npz"),
+              "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00" * 64)
+    restored, step, _ = ck.restore(state)
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: injected failures must not change the final model
+# ---------------------------------------------------------------------------
+
+
+def _run_loop(tmp_path, fail_at=None, steps=12):
+    cfg, tcfg = _tiny()
+    dcfg = _dcfg(cfg)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    inj = FaultInjector(fail_at) if fail_at else None
+    state, info = train_loop(
+        step, state, dcfg,
+        LoopConfig(total_steps=steps, ckpt_every=4, log_every=100),
+        str(tmp_path), fault_injector=inj, log=lambda s: None,
+    )
+    return state, info
+
+
+def test_fault_recovery_bitexact(tmp_path):
+    clean_state, _ = _run_loop(tmp_path / "clean")
+    faulty_state, _ = _run_loop(tmp_path / "faulty",
+                                fail_at={6: "sim-preemption",
+                                         9: "sim-device-loss"})
+    for a, b in zip(jax.tree_util.tree_leaves(clean_state["params"]),
+                    jax.tree_util.tree_leaves(faulty_state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_from_checkpoint_continues(tmp_path):
+    # run 8 steps, then "restart the job" and run to 12
+    cfg, tcfg = _tiny()
+    dcfg = _dcfg(cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    s0 = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    _run = lambda st, n: train_loop(
+        step, st, dcfg, LoopConfig(total_steps=n, ckpt_every=4,
+                                   log_every=100),
+        str(tmp_path), log=lambda s: None)
+    st, _ = _run(s0, 8)
+    st2, info = _run(init_train_state(cfg, tcfg, jax.random.PRNGKey(0)), 12)
+    # resumed run must start from step 8 checkpoint, not step 0
+    assert info["history"][0]["step"] == 9
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_topk_error_feedback_invariant():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32)}
+    e = init_error(g)
+    cfg = CompressionConfig(kind="topk", topk_frac=0.1)
+    c, e_new = compress(g, e, cfg)
+    # exact invariant: compressed + residual == grad + old error
+    np.testing.assert_allclose(c["w"] + e_new["w"], g["w"], rtol=1e-6)
+    # sparsity
+    assert int((c["w"] != 0).sum()) <= max(1, int(64 * 0.1)) + 1
+
+
+def test_int8_compression_unbiased():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(512,)).astype(np.float32))}
+    e = init_error(g)
+    cfg = CompressionConfig(kind="int8")
+    samples = []
+    for i in range(50):
+        c, _ = compress(g, e, cfg, key=jax.random.PRNGKey(i))
+        samples.append(np.asarray(c["w"]))
+    mean = np.mean(samples, axis=0)
+    np.testing.assert_allclose(mean, g["w"], atol=0.02)
+
+
+def test_training_with_topk_compression_converges():
+    cfg, _ = _tiny()
+    tcfg = TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=1e-2, warmup_steps=2,
+                                    total_steps=100, weight_decay=0.0),
+        compression=CompressionConfig(kind="topk", topk_frac=0.3),
+    )
+    dcfg = _dcfg(cfg)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    it = DataIterator(dcfg, prefetch=0)
+    losses = []
+    rng = jax.random.PRNGKey(0)
+    for i in range(40):
+        state, m = step(state, next(it), jax.random.fold_in(rng, i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+# ---------------------------------------------------------------------------
+# Optimizer unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_matches_reference_formula():
+    cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                            weight_decay=0.0, clip_norm=1e9,
+                            warmup_steps=0, total_steps=10**9,
+                            min_lr_frac=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    st = adamw.init_state(p)
+    newp, st, _ = adamw.apply_updates(p, g, st, cfg)
+    mu = 0.1 * 0.5
+    nu = 0.01 * 0.25
+    upd = (mu / 0.1) / (np.sqrt(nu / 0.01) + 1e-8)
+    np.testing.assert_allclose(newp["w"][0], 1.0 - 0.1 * upd, rtol=1e-5)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                            min_lr_frac=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(adamw.schedule(cfg, jnp.int32(110))) == pytest.approx(0.1)
