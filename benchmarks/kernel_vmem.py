@@ -16,6 +16,7 @@ from __future__ import annotations
 
 from repro.core import intensity as it
 from repro.kernels.dwconv2d import _block_c
+from repro.kernels.separable_fused import _block_sizes, _vmem_bytes
 
 PEAK = 197e12
 HBM = 819e9
@@ -65,8 +66,40 @@ def pwconv_rows(layers, bg=256, bco=256, bci=256) -> list[dict]:
     return rows
 
 
+def separable_fused_rows(blocks) -> list[dict]:
+    """VMEM claim of the fused DW+PW kernel at the chooser's block shapes:
+    2x input slab + DW intermediate + fp32 accumulator + out tile + 2x W."""
+    from benchmarks.layers import sep_geometry
+
+    rows = []
+    for blk in blocks:
+        s = blk.stride
+        hi, wi, ho, wo = sep_geometry(blk)
+        picked = _block_sizes(hi, wi, ho, wo, blk.c_in, blk.c_out)
+        if picked is None:
+            rows.append({"name": blk.name, "fusible": False})
+            continue
+        cb, cob = picked
+        vmem = _vmem_bytes(hi, wi, ho, wo, cb, cob)
+        t = it.separable_traffic_fused(
+            1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s, block_co=cob)
+        tc, tm = t.time_s(PEAK, HBM)
+        rows.append({
+            "name": blk.name,
+            "fusible": True,
+            "block_c": cb,
+            "block_co": cob,
+            "vmem_bytes": vmem,
+            "vmem_ok": vmem <= VMEM,
+            "ai_flops_per_byte": t.intensity,
+            "bound": "HBM" if tm > tc else "MXU",
+            "roofline_us": max(tc, tm) * 1e6,
+        })
+    return rows
+
+
 def csv_rows() -> list[str]:
-    from benchmarks.layers import SUITES
+    from benchmarks.layers import SEP_SUITES, SUITES
     out = []
     dws, pws = SUITES["mobilenet_v1"]
     for r in dwconv2d_rows(dws):
@@ -80,5 +113,14 @@ def csv_rows() -> list[str]:
             f"vmem/pwconv/{r['name']},{r['roofline_us']:.1f},"
             f"blocks={r['blocks']};vmem_KiB={r['vmem_bytes']//1024};"
             f"fits={r['vmem_ok']};mxu128={r['mxu_aligned']};"
+            f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
+    for r in separable_fused_rows(SEP_SUITES["mobilenet_v1"]):
+        if not r["fusible"]:
+            out.append(f"vmem/sepfused/{r['name']},0.0,fusible=False")
+            continue
+        out.append(
+            f"vmem/sepfused/{r['name']},{r['roofline_us']:.1f},"
+            f"blocks=c{r['block_c']}xco{r['block_co']};"
+            f"vmem_KiB={r['vmem_bytes']//1024};fits={r['vmem_ok']};"
             f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
     return out

@@ -30,6 +30,28 @@ class PWLayer:
     c_out: int
 
 
+@dataclasses.dataclass(frozen=True)
+class SepBlock:
+    """A whole depthwise-separable block (DW -> act -> PW): the unit the
+    fused kernel (kernels/separable_fused.py) executes in one pass."""
+    name: str
+    h: int          # input spatial size (square input assumed, SAME pad)
+    w: int
+    c_in: int       # DW channels == PW reduction dim
+    c_out: int
+    stride: int
+    hf: int = 3
+
+
+def sep_geometry(blk: SepBlock) -> tuple[int, int, int, int]:
+    """SAME-pad geometry the fused kernel sees: (hi, wi, ho, wo), with
+    hi/wi the VALID-equivalent padded input dims. Single source for every
+    traffic/VMEM table over SepBlocks."""
+    s = blk.stride
+    ho, wo = -(-blk.h // s), -(-blk.w // s)
+    return (ho - 1) * s + blk.hf, (wo - 1) * s + blk.hf, ho, wo
+
+
 MOBILENET_V1_DW = [
     DWLayer("V1-D1", 112, 112, 32, 3, 1),
     DWLayer("V1-D2", 112, 112, 64, 3, 2),
@@ -112,4 +134,33 @@ SUITES = {
     "mobilenet_v1": (MOBILENET_V1_DW, MOBILENET_V1_PW),
     "mobilenet_v2": (MOBILENET_V2_DW, MOBILENET_V2_PW),
     "mnasnet_a1": (MNASNET_A1_DW, MNASNET_A1_PW),
+}
+
+# MobileNetV1 body as whole separable blocks (Table 1): the fused-vs-unfused
+# benchmark unit. (c_in, c_out, stride) at each block's input resolution.
+MOBILENET_V1_SEP = [
+    SepBlock("V1-B1", 112, 112, 32, 64, 1),
+    SepBlock("V1-B2", 112, 112, 64, 128, 2),
+    SepBlock("V1-B3", 56, 56, 128, 128, 1),
+    SepBlock("V1-B4", 56, 56, 128, 256, 2),
+    SepBlock("V1-B5", 28, 28, 256, 256, 1),
+    SepBlock("V1-B6", 28, 28, 256, 512, 2),
+    SepBlock("V1-B7", 14, 14, 512, 512, 1),
+    SepBlock("V1-B12", 14, 14, 512, 1024, 2),
+    SepBlock("V1-B13", 7, 7, 1024, 1024, 1),
+]
+
+# MobileNetV2 inverted-residual tails (DW at expanded width -> PW-project):
+# the slice the fused kernel covers inside an inverted residual.
+MOBILENET_V2_SEP = [
+    SepBlock("V2-T2", 112, 112, 96, 24, 2),
+    SepBlock("V2-T3", 56, 56, 144, 32, 2),
+    SepBlock("V2-T5", 28, 28, 192, 64, 2),
+    SepBlock("V2-T6", 14, 14, 384, 96, 1),
+    SepBlock("V2-T7", 7, 7, 960, 320, 1),
+]
+
+SEP_SUITES = {
+    "mobilenet_v1": MOBILENET_V1_SEP,
+    "mobilenet_v2": MOBILENET_V2_SEP,
 }

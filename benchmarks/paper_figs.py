@@ -23,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.layers import SUITES
+from benchmarks.layers import SEP_SUITES, SUITES, sep_geometry
 from repro.core import intensity as it
 from repro.kernels import ref
+from repro.kernels.separable_fused import _block_sizes
 
 # v5e single-chip constants (roofline/analysis.py)
 PEAK = 197e12
@@ -101,6 +102,62 @@ def bench_pw_layer(layer, rng) -> dict:
     }
 
 
+def bench_separable_block(blk, rng) -> dict:
+    """Fused vs unfused separable block: measured CPU wall-time of both XLA
+    paths, plus the modeled HBM traffic of the two kernel strategies — the
+    'saved' column is the DW intermediate round-trip (DESIGN.md §3)."""
+    x = jnp.asarray(rng.normal(size=(1, blk.h, blk.w, blk.c_in))
+                    .astype(np.float32))
+    f = jnp.asarray(rng.normal(size=(blk.hf, blk.hf, blk.c_in))
+                    .astype(np.float32) / blk.hf)
+    w = jnp.asarray(rng.normal(size=(blk.c_in, blk.c_out))
+                    .astype(np.float32) * blk.c_in ** -0.5)
+    db = jnp.zeros((blk.c_in,), jnp.float32)
+    pb = jnp.zeros((blk.c_out,), jnp.float32)
+
+    def unfused(x, f, w, db, pb):
+        y = ref.dwconv2d_ref(x, f, stride=blk.stride, padding="same")
+        y = jnp.clip(y + db, 0.0, 6.0)
+        return ref.pwconv_ref(y, w, bias=pb, activation="relu6")
+
+    def fused(x, f, w, db, pb):
+        return ref.separable_fused_ref(
+            x, f, w, db, pb, stride=blk.stride, padding="same",
+            dw_activation="relu6", activation="relu6")
+
+    us_unfused = _time_jit(jax.jit(unfused), x, f, w, db, pb)
+    us_fused = _time_jit(jax.jit(fused), x, f, w, db, pb)
+
+    # modeled traffic at the fused kernel's chooser-picked blocks, on the
+    # SAME-padded (VALID-equivalent) geometry the kernels actually see
+    s = blk.stride
+    hi, wi, ho, wo = sep_geometry(blk)
+    picked = _block_sizes(hi, wi, ho, wo, blk.c_in, blk.c_out)
+    bco_fused = picked[1] if picked else blk.c_out
+    unf = it.separable_traffic_unfused(
+        1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s)
+    fus = it.separable_traffic_fused(
+        1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
+        block_co=bco_fused)
+    t_unf = max(unf.time_s(PEAK, HBM))
+    t_fus = max(fus.time_s(PEAK, HBM))
+    return {
+        "name": blk.name,
+        "us_unfused_xla_cpu": us_unfused,
+        "us_fused_xla_cpu": us_fused,
+        "bytes_unfused": unf.bytes_hbm,
+        "bytes_fused": fus.bytes_hbm,
+        "bytes_saved": unf.bytes_hbm - fus.bytes_hbm,
+        "bytes_intermediate": it.separable_intermediate_bytes(
+            1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s),
+        "fusible": picked is not None,
+        "block_co": bco_fused,
+        "ai_unfused": unf.intensity,
+        "ai_fused": fus.intensity,
+        "modeled_speedup": t_unf / t_fus,
+    }
+
+
 def fig_unoptimized_anchor() -> dict:
     """Paper Fig. 1 'Unoptimized' point: Algorithm-1 naive loops vs XLA,
     on a small layer (numpy loops are too slow for the big ones)."""
@@ -157,6 +214,10 @@ def run_all(quick: bool = False):
             "dw": [bench_dw_layer(l, rng) for l in dws],
             "pw": [bench_pw_layer(l, rng) for l in pws],
         }
+    for suite, blks in SEP_SUITES.items():
+        if quick:
+            blks = blks[:3]
+        results[suite]["sep"] = [bench_separable_block(b, rng) for b in blks]
     results["fig1_anchor"] = fig_unoptimized_anchor()
     results["fig7"] = fig7_scalability()
     return results

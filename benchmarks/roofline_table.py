@@ -1,4 +1,6 @@
-"""Assemble the EXPERIMENTS.md roofline table from dry-run artifacts."""
+"""Assemble the EXPERIMENTS.md roofline table from dry-run artifacts, plus
+the separable-block fusion accounting table (fused vs unfused HBM bytes,
+with the removed DW-intermediate term broken out — DESIGN.md §3)."""
 from __future__ import annotations
 
 import glob
@@ -7,6 +9,7 @@ import os
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS
+from repro.core import intensity as it
 
 COLUMNS = [
     "arch", "shape", "mesh", "status", "compute_s", "memory_s",
@@ -54,6 +57,63 @@ def markdown_table(recs: list[dict], mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def separable_fusion_rows() -> list[dict]:
+    """Per-block HBM accounting: unfused = fused + intermediate round-trip.
+
+    ``intermediate_mb`` is the term the fused kernel removes (the DW output's
+    HBM store + per-Co-panel loads); fused bytes must be strictly lower for
+    every block the chooser can fuse (asserted by tests/test_intensity.py).
+    """
+    try:
+        from benchmarks.layers import SEP_SUITES, sep_geometry
+    except ModuleNotFoundError:  # run as `python benchmarks/roofline_table.py`
+        from layers import SEP_SUITES, sep_geometry
+    from repro.kernels.separable_fused import _block_sizes
+
+    rows = []
+    for suite, blks in SEP_SUITES.items():
+        for blk in blks:
+            s = blk.stride
+            hi, wi, ho, wo = sep_geometry(blk)
+            picked = _block_sizes(hi, wi, ho, wo, blk.c_in, blk.c_out)
+            bco = picked[1] if picked else blk.c_out
+            unf = it.separable_traffic_unfused(
+                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s)
+            fus = it.separable_traffic_fused(
+                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
+                block_co=bco)
+            inter = it.separable_intermediate_bytes(
+                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s)
+            rows.append({
+                "suite": suite,
+                "name": blk.name,
+                "fusible": picked is not None,
+                "blocks": f"c{picked[0]}xco{picked[1]}" if picked else "-",
+                "unfused_mb": unf.bytes_hbm / 1e6,
+                "fused_mb": fus.bytes_hbm / 1e6,
+                "intermediate_mb": inter / 1e6,
+                "saved_mb": (unf.bytes_hbm - fus.bytes_hbm) / 1e6,
+                "ai_unfused": unf.intensity,
+                "ai_fused": fus.intensity,
+            })
+    return rows
+
+
+def separable_fusion_markdown() -> str:
+    lines = [
+        "| block | fused blocks | unfused HBM (MB) | fused HBM (MB) | "
+        "intermediate term (MB) | saved (MB) | AI unfused | AI fused |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in separable_fusion_rows():
+        lines.append(
+            f"| {r['suite']}/{r['name']} | {r['blocks']} | "
+            f"{r['unfused_mb']:.2f} | {r['fused_mb']:.2f} | "
+            f"{r['intermediate_mb']:.2f} | {r['saved_mb']:.2f} | "
+            f"{r['ai_unfused']:.2f} | {r['ai_fused']:.2f} |")
+    return "\n".join(lines)
+
+
 def csv_rows(recs: list[dict]) -> list[str]:
     out = []
     for r in recs:
@@ -72,3 +132,5 @@ if __name__ == "__main__":
     print(markdown_table(recs, "single"))
     print()
     print(markdown_table(recs, "multi"))
+    print()
+    print(separable_fusion_markdown())

@@ -37,6 +37,22 @@ def main() -> None:
                 f"pwconv/{suite}/{r['name']},{r['us_xla_cpu']:.1f},"
                 f"AI_rtrd={r['ai_rtrd']:.3f};AI_rtra={r['ai_rtra']:.3f};"
                 f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
+        for r in results[suite].get("sep", []):
+            if not r["fusible"]:
+                # no fused block shape fits VMEM: the op takes the unfused
+                # fallback, so a fused-traffic claim would be fiction
+                rows.append(
+                    f"sepfused/{suite}/{r['name']},"
+                    f"{r['us_fused_xla_cpu']:.1f},fusible=False;"
+                    f"MB_unfused={r['bytes_unfused']/1e6:.2f}")
+                continue
+            rows.append(
+                f"sepfused/{suite}/{r['name']},{r['us_fused_xla_cpu']:.1f},"
+                f"us_unfused={r['us_unfused_xla_cpu']:.1f};"
+                f"MB_unfused={r['bytes_unfused']/1e6:.2f};"
+                f"MB_fused={r['bytes_fused']/1e6:.2f};"
+                f"MB_saved={r['bytes_saved']/1e6:.2f};"
+                f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
     a = results["fig1_anchor"]
     rows.append(f"fig1/{a['name']},{a['us_xla_cpu']:.1f},"
                 f"naive_loops_us={a['us_naive_loops']:.0f};"

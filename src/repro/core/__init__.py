@@ -6,6 +6,12 @@ from repro.core.dwconv import (
     init_conv_state,
 )
 from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
+from repro.core.separable import (
+    init_inverted_residual,
+    init_separable,
+    inverted_residual,
+    separable_block,
+)
 
 __all__ = [
     "DEFAULT_POLICY",
@@ -14,5 +20,9 @@ __all__ = [
     "depthwise1d_step",
     "depthwise2d",
     "init_conv_state",
+    "init_inverted_residual",
+    "init_separable",
+    "inverted_residual",
     "pointwise",
+    "separable_block",
 ]

@@ -148,6 +148,56 @@ def pwconv_traffic_rtrd(
     return Traffic(flops, bytes_)
 
 
+def separable_traffic_unfused(
+    b: int, hi: int, wi: int, c: int, co: int, hf: int, wf: int, stride: int,
+    bg: int = 256, bci: int = 256, bco: int = 256, dtype_bytes: int = 4,
+) -> Traffic:
+    """Depthwise-separable block as two standalone kernels: the DW output
+    (B*Ho*Wo*C) is stored to HBM by dwconv2d and re-read by pwconv once per
+    Co panel — the intermediate round-trip the fused kernel removes."""
+    dw = dwconv2d_traffic(b, hi, wi, c, hf, wf, stride, dtype_bytes)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    pw = pwconv_traffic_rtrd(b * ho * wo, c, co, bg, bci, bco, dtype_bytes)
+    return Traffic(dw.flops + pw.flops, dw.bytes_hbm + pw.bytes_hbm)
+
+
+def separable_traffic_fused(
+    b: int, hi: int, wi: int, c: int, co: int, hf: int, wf: int, stride: int,
+    block_co: int | None = None, dtype_bytes: int = 4,
+) -> Traffic:
+    """Fused DW+PW kernel (kernels/separable_fused.py): the DW output exists
+    only in VMEM. Input streamed once per Co panel (recompute instead of
+    round-trip), PW weight once per batch row-panel, output stored once.
+    With a single Co panel (the chooser's preferred case) this is exactly
+    the unfused traffic minus the intermediate store + re-read."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    n_co = math.ceil(co / (block_co or co))
+    flops = (n_co * 2.0 * b * ho * wo * c * hf * wf  # DW recomputed per panel
+             + 2.0 * b * ho * wo * c * co)           # PW stage
+    bytes_ = dtype_bytes * (
+        n_co * b * hi * wi * c       # input slab, once per Co panel
+        + n_co * b * hf * wf * c     # DW filter tile (revisited per panel)
+        + b * c * co                 # PW weight, once per batch row-panel
+        + b * ho * wo * co           # output stored once
+        # intermediate term: 0 — never leaves VMEM (DESIGN.md §3)
+    )
+    return Traffic(flops, bytes_)
+
+
+def separable_intermediate_bytes(
+    b: int, hi: int, wi: int, c: int, co: int, hf: int, wf: int, stride: int,
+    bco: int = 256, dtype_bytes: int = 4,
+) -> float:
+    """The removed term: HBM bytes the unfused composition spends moving the
+    DW intermediate (one store + one load per Co panel of pwconv)."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    n_jpanels = math.ceil(co / bco)
+    return dtype_bytes * b * ho * wo * c * (1 + n_jpanels)
+
+
 def pwconv_traffic_rtra(
     g: int, ci: int, co: int, bg: int, bci: int, bco: int,
     dtype_bytes: int = 4,

@@ -20,9 +20,13 @@ class KernelPolicy:
     """Global execution policy for the paper's ops.
 
     impl: "auto" | "xla" | "pallas". interpret=True only for CPU validation.
+    fused: run depthwise-separable blocks through the single-pass fused
+    DW+PW kernel (DESIGN.md §3) instead of composing the standalone ops —
+    the DW intermediate then never round-trips HBM.
     """
     impl: str = "auto"
     interpret: bool = False
+    fused: bool = False
     block_g: int = 256
     block_co: int = 256
     block_ci: int = 256

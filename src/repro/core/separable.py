@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.dwconv import depthwise2d
 from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
+from repro.kernels import ops
 
 
 def init_separable(key, c_in: int, c_out: int, hf: int = 3, wf: int = 3):
@@ -38,7 +39,19 @@ def separable_block(
     activation: str = "relu6",
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
-    """MobileNetV1 depthwise-separable block (inference, BN folded)."""
+    """MobileNetV1 depthwise-separable block (inference, BN folded).
+
+    With ``policy.fused`` the whole block runs as one kernel pass and the DW
+    output never touches HBM (kernels/separable_fused.py, DESIGN.md §3).
+    """
+    if policy.fused:
+        return ops.separable_fused(
+            x, params["dw_filter"], params["pw_weight"],
+            params["dw_bias"], params["pw_bias"],
+            stride=stride, padding="same",
+            dw_activation=activation, activation=activation,
+            impl=policy.impl, interpret=policy.interpret,
+        )
     y = depthwise2d(x, params["dw_filter"], stride=stride, policy=policy)
     y = y + params["dw_bias"]
     y = jnp.clip(y, 0.0, 6.0) if activation == "relu6" else jax.nn.relu(y)
@@ -66,11 +79,24 @@ def inverted_residual(
     stride: int = 1,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
-    """MobileNetV2 inverted-residual block (PW-expand -> DW -> PW-project)."""
+    """MobileNetV2 inverted-residual block (PW-expand -> DW -> PW-project).
+
+    With ``policy.fused`` the DW -> PW-project tail (and the residual add)
+    runs as one kernel pass; only the expansion remains a standalone GEMM.
+    """
     y = pointwise(x, params["expand_w"], activation="relu6", policy=policy)
+    c_out = params["project_w"].shape[-1]
+    res = x if stride == 1 and x.shape[-1] == c_out else None
+    if policy.fused:
+        return ops.separable_fused(
+            y, params["dw_filter"], params["project_w"], None, None, res,
+            stride=stride, padding="same",
+            dw_activation="relu6", activation=None,
+            impl=policy.impl, interpret=policy.interpret,
+        )
     y = depthwise2d(y, params["dw_filter"], stride=stride, policy=policy)
     y = jnp.clip(y, 0.0, 6.0)
     y = pointwise(y, params["project_w"], policy=policy)
-    if stride == 1 and x.shape[-1] == y.shape[-1]:
-        y = y + x
+    if res is not None:
+        y = y + res
     return y

@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.dwconv1d import dwconv1d_causal_pallas
 from repro.kernels.dwconv2d import dwconv2d_pallas
 from repro.kernels.pwconv import pwconv_pallas
+from repro.kernels.separable_fused import _block_sizes, separable_fused_pallas
 
 
 def _resolve(impl: str) -> str:
@@ -76,6 +77,74 @@ def dwconv1d_causal(
         return ref.dwconv1d_causal_ref(x, f)
     return dwconv1d_causal_pallas(
         x, f, block_l=block_l, block_d=block_d, interpret=interpret
+    )
+
+
+def separable_fused(
+    x: jax.Array,
+    dw_f: jax.Array,
+    pw_w: jax.Array,
+    dw_bias: Optional[jax.Array] = None,
+    pw_bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "same",
+    dw_activation: Optional[str] = "relu6",
+    activation: Optional[str] = None,
+    impl: str = "auto",
+    interpret: bool = False,
+    vmem_budget: int = 12 * 1024 * 1024,
+) -> jax.Array:
+    """Fused depthwise-separable block: DW -> act -> PW in one kernel pass.
+
+    x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co) -> (B,Ho,Wo,Co). On the
+    pallas path the DW intermediate never touches HBM (DESIGN.md §3); when
+    no fused block shape fits the VMEM budget, falls back to the unfused
+    Pallas composition. The fallback is semantically the same block but
+    rounds the DW intermediate to the activation dtype between the two
+    kernels (the fused path keeps it fp32 into the GEMM), so sub-fp32
+    dtypes can differ by intermediate-rounding error across the
+    VMEM-feasibility boundary.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.separable_fused_ref(
+            x, dw_f, pw_w, dw_bias, pw_bias, residual,
+            stride=stride, padding=padding,
+            dw_activation=dw_activation, activation=activation,
+        )
+    hf, wf = dw_f.shape[0], dw_f.shape[1]
+    if padding.lower() == "same":
+        x = _pad_same(x, hf, wf, stride)
+    elif padding.lower() != "valid":
+        raise ValueError(padding)
+    hi, wi = x.shape[1], x.shape[2]
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    hiu = (ho - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    blocks = _block_sizes(hiu, wiu, ho, wo, x.shape[-1], pw_w.shape[-1],
+                          vmem_budget=vmem_budget,
+                          residual=residual is not None)
+    if blocks is None:
+        # Accumulator panel cannot fit VMEM at any block shape: compose the
+        # standalone kernels instead (correct, just not fused).
+        y = dwconv2d_pallas(x, dw_f, stride=stride, interpret=interpret)
+        if dw_bias is not None:
+            y = y + dw_bias
+        y = ref._epilogue(y, None, dw_activation).astype(x.dtype)
+        out = pwconv(
+            y, pw_w, pw_bias, activation=activation,
+            impl="pallas", interpret=interpret,
+        )
+        if residual is not None:
+            out = out + residual
+        return out
+    return separable_fused_pallas(
+        x, dw_f, pw_w, dw_bias, pw_bias, residual,
+        stride=stride, dw_activation=dw_activation, activation=activation,
+        block_c=blocks[0], block_co=blocks[1], interpret=interpret,
     )
 
 

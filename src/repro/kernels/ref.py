@@ -164,6 +164,40 @@ def pwconv_ref(
     return y.astype(x.dtype)
 
 
+def separable_fused_ref(
+    x: jax.Array,
+    dw_f: jax.Array,
+    pw_w: jax.Array,
+    dw_bias: Optional[jax.Array] = None,
+    pw_bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "valid",
+    dw_activation: Optional[str] = "relu6",
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Oracle for the fused DW+PW block (kernels/separable_fused.py).
+
+    Same math as the fused kernel: the DW output stays fp32 into the GEMM
+    (the unfused composition rounds it to the activation dtype in between).
+    """
+    y = dwconv2d_ref(
+        x.astype(jnp.float32), dw_f.astype(jnp.float32),
+        stride=stride, padding=padding,
+    )
+    if dw_bias is not None:
+        y = y + dw_bias.astype(jnp.float32)
+    y = _epilogue(y, None, dw_activation)
+    out = jnp.dot(
+        y, pw_w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    out = _epilogue(out, pw_bias, activation)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
 def matmul_rtra_ref(
     a: jax.Array, b: jax.Array, *, block_k: int = 128
 ) -> jax.Array:

@@ -1,0 +1,293 @@
+"""Fused depthwise-separable block Pallas kernel (DW3x3 -> act -> PW GEMM).
+
+The paper's thesis one level up (DESIGN.md §3): ``dwconv2d`` and ``pwconv``
+are both memory-bound, and composing them through HBM makes the DW output —
+a tensor the size of the block's activation — take a full HBM round-trip
+(one store by the DW kernel, one load per Co panel by the PW kernel) purely
+as an artifact of op granularity. This kernel computes
+
+    DW(HfxWf, stride) (+ folded-BN bias) -> activation -> PW GEMM
+    (+ PW bias, activation, optional residual add)
+
+in ONE grid pass. The DW output tile is produced in VMEM and immediately
+consumed as the A-operand of the output-stationary PW reduction; it never
+exists in HBM.
+
+Grid and residency (mirrors ``pwconv``'s RTRD structure):
+
+* grid ``(B, Co/Cob, C/Cb)`` with the channel reduction **innermost** and the
+  output BlockSpec ignoring it — the fp32 accumulator ``(Ho*Wo, Cob)`` stays
+  VMEM-resident across the whole reduction and is stored exactly once.
+* per reduction step, the kernel runs the ``dwconv2d`` shift-and-FMA over one
+  channel slab (VPU work), applies bias+activation, reshapes to
+  ``(Ho*Wo, Cb)`` and feeds the MXU matmul against the ``(Cb, Cob)`` weight
+  tile. DW output lives only as that VMEM value.
+
+Traffic win (``core.intensity.separable_traffic_*``): with a single Co panel
+(the common MobileNet case — the chooser below targets it) the fused block
+removes exactly the intermediate round-trip, ``2 * B*Ho*Wo*C * dtype`` bytes.
+Channel padding is harmless for any activation: padded DW channels multiply
+zero-padded PW weight rows, so their contribution is exactly zero.
+
+When fusion is NOT profitable or feasible (``_block_sizes`` returns None —
+the ``Ho*Wo`` accumulator panel cannot fit VMEM even at the smallest blocks),
+callers fall back to the unfused composition; see ``ops.separable_fused``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pwconv import _epilogue
+
+
+def _snap(cb: int, c: int) -> int:
+    """Snap a raw channel-count budget to a usable block: all of ``c``, a
+    multiple of 128 lanes, or the tiny-VMEM power-of-two fallback — the same
+    preference order as ``dwconv2d._block_c``."""
+    if c <= cb:
+        return c
+    if cb >= 128:
+        return (cb // 128) * 128
+    p = 1
+    while p * 2 <= cb:
+        p *= 2
+    return p
+
+
+def _co_candidates(co: int) -> list[int]:
+    """Descending Co-block candidates: all of Co first (single panel — the
+    traffic-optimal case), then multiples of 128, then powers of two."""
+    cands = [co]
+    k = ((co - 1) // 128) * 128
+    while k >= 128:
+        cands.append(k)
+        k -= 128
+    p = 64
+    while p >= 1:
+        if p < co:
+            cands.append(p)
+        p //= 2
+    return cands
+
+
+def _vmem_bytes(hiu: int, wiu: int, ho: int, wo: int, cb: int, cob: int,
+                residual: bool = False) -> int:
+    """fp32 working-set bytes of the fused kernel at blocks ``(cb, cob)``:
+    2x double-buffered input slab + DW intermediate + fp32 accumulator +
+    output tile + 2x PW weight tile (+ residual input tile). The single
+    source of truth for the chooser below and benchmarks/kernel_vmem.py."""
+    out_side = (2 + (2 if residual else 0)) * ho * wo * cob * 4
+    per_c = (2 * hiu * wiu + ho * wo + 2 * cob) * 4
+    return out_side + cb * per_c
+
+
+def _block_sizes(
+    hiu: int, wiu: int, ho: int, wo: int, c: int, co: int,
+    vmem_budget: int = 12 * 1024 * 1024,
+    residual: bool = False,
+) -> Optional[tuple[int, int]]:
+    """Pick ``(block_c, block_co)`` fitting the VMEM budget, or None.
+
+    fp32 accounting via :func:`_vmem_bytes`, consistent with
+    ``dwconv2d._block_c``. Prefers a single Co panel (block_co=co), then the
+    largest channel slab that still fits.
+    """
+    for cob in _co_candidates(co):
+        base = _vmem_bytes(hiu, wiu, ho, wo, 0, cob, residual=residual)
+        rem = vmem_budget - base
+        if rem <= 0:
+            continue
+        per_c = _vmem_bytes(hiu, wiu, ho, wo, 1, cob) - _vmem_bytes(
+            hiu, wiu, ho, wo, 0, cob)
+        cb_raw = rem // per_c
+        if cb_raw < 1:
+            continue
+        return _snap(int(cb_raw), c), cob
+    return None
+
+
+def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
+                  dw_activation, activation, has_dwb: bool, has_pwb: bool,
+                  has_res: bool, out_dtype):
+    """refs = (x, f, [dw_bias,] w, [pw_bias,] [residual,] out, acc).
+
+    Blocks: x (1, Hiu, Wiu, Cb); f (Hf, Wf, Cb); dw_bias (1, Cb);
+    w (Cb, Cob); pw_bias (1, Cob); residual (1, Ho, Wo, Cob);
+    out (1, Ho, Wo, Cob); acc VMEM scratch (Ho*Wo, Cob) fp32.
+    """
+    it = iter(refs)
+    x_ref = next(it)
+    f_ref = next(it)
+    dwb_ref = next(it) if has_dwb else None
+    w_ref = next(it)
+    pwb_ref = next(it) if has_pwb else None
+    res_ref = next(it) if has_res else None
+    out_ref = next(it)
+    acc_ref = next(it)
+
+    _, ho, wo, cob = out_ref.shape
+    cb = x_ref.shape[3]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- DW stage: shift-and-FMA over the channel slab (dwconv2d Alg. 4) ---
+    x = x_ref[0].astype(jnp.float32)
+    f = f_ref[...].astype(jnp.float32)
+    s = stride
+    dw = jnp.zeros((ho, wo, cb), jnp.float32)
+    for n in range(hf):
+        for m in range(wf):
+            win = jax.lax.slice(
+                x,
+                (n, m, 0),
+                (n + (ho - 1) * s + 1, m + (wo - 1) * s + 1, cb),
+                (s, s, 1),
+            )
+            dw = dw + win * f[n, m][None, None, :]
+    dw = _epilogue(
+        dw, dwb_ref[0][None, None, :] if dwb_ref is not None else None,
+        dw_activation,
+    )
+
+    # --- PW stage: DW tile (VMEM value, never stored) is the A-operand ---
+    a = dw.reshape(ho * wo, cb)
+    acc_ref[...] += jnp.dot(
+        a, w_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():  # single store of the block output
+        acc = _epilogue(
+            acc_ref[...],
+            pwb_ref[...] if pwb_ref is not None else None,
+            activation,
+        )
+        y = acc.reshape(ho, wo, cob)
+        if res_ref is not None:
+            y = y + res_ref[0].astype(jnp.float32)
+        out_ref[0] = y.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "dw_activation", "activation", "block_c",
+                     "block_co", "interpret"),
+)
+def separable_fused_pallas(
+    x: jax.Array,
+    dw_f: jax.Array,
+    pw_w: jax.Array,
+    dw_bias: Optional[jax.Array] = None,
+    pw_bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    dw_activation: Optional[str] = "relu6",
+    activation: Optional[str] = None,
+    block_c: int | None = None,
+    block_co: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused DW+PW block. x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co)
+    [+ dw_bias (C,), pw_bias (Co,), residual (B,Ho,Wo,Co)] -> (B,Ho,Wo,Co).
+
+    VALID geometry — SAME padding is applied by the wrapper (ops.py).
+    Raises ValueError when no block shape fits VMEM (callers should have
+    consulted :func:`_block_sizes` and taken the unfused path instead).
+    """
+    b, hi, wi, c = x.shape
+    hf, wf, cf = dw_f.shape
+    ci, co = pw_w.shape
+    assert c == cf == ci, (x.shape, dw_f.shape, pw_w.shape)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    assert ho >= 1 and wo >= 1, "input smaller than filter"
+    hiu = (ho - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+
+    if block_c is None or block_co is None:
+        picked = _block_sizes(hiu, wiu, ho, wo, c, co)
+        if picked is None:
+            raise ValueError(
+                f"no fused block shape fits VMEM for {(hi, wi, c, co)}; "
+                "use the unfused composition (ops.separable_fused does this)"
+            )
+        cb = block_c or picked[0]
+        cob = block_co or picked[1]
+    else:
+        cb, cob = block_c, block_co
+
+    # Channel / Co padding (zero rows of pw_w nullify padded DW channels).
+    pad_c = (-c) % cb
+    pad_co = (-co) % cob
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+        dw_f = jnp.pad(dw_f, ((0, 0), (0, 0), (0, pad_c)))
+        pw_w = jnp.pad(pw_w, ((0, pad_c), (0, 0)))
+        if dw_bias is not None:
+            dw_bias = jnp.pad(dw_bias, ((0, pad_c),))
+    if pad_co:
+        pw_w = jnp.pad(pw_w, ((0, 0), (0, pad_co)))
+        if pw_bias is not None:
+            pw_bias = jnp.pad(pw_bias, ((0, pad_co),))
+        if residual is not None:
+            residual = jnp.pad(
+                residual, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+    cp, cop = c + pad_c, co + pad_co
+    nk = cp // cb
+
+    x = x[:, :hiu, :wiu, :]
+
+    in_specs = [
+        pl.BlockSpec((1, hiu, wiu, cb), lambda i, j, k: (i, 0, 0, k)),
+        pl.BlockSpec((hf, wf, cb), lambda i, j, k: (0, 0, k)),
+    ]
+    inputs = [x, dw_f]
+    if dw_bias is not None:
+        in_specs.append(pl.BlockSpec((1, cb), lambda i, j, k: (0, k)))
+        inputs.append(dw_bias.reshape(1, -1))
+    in_specs.append(pl.BlockSpec((cb, cob), lambda i, j, k: (k, j)))
+    inputs.append(pw_w)
+    if pw_bias is not None:
+        in_specs.append(pl.BlockSpec((1, cob), lambda i, j, k: (0, j)))
+        inputs.append(pw_bias.reshape(1, -1))
+    if residual is not None:
+        in_specs.append(
+            pl.BlockSpec((1, ho, wo, cob), lambda i, j, k: (i, 0, 0, j)))
+        inputs.append(residual)
+
+    kernel = functools.partial(
+        _fused_kernel, hf=hf, wf=wf, stride=stride, nk=nk,
+        dw_activation=dw_activation, activation=activation,
+        has_dwb=dw_bias is not None, has_pwb=pw_bias is not None,
+        has_res=residual is not None, out_dtype=x.dtype,
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except AttributeError:
+        compiler_params = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, cop // cob, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, cob), lambda i, j, k: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho * wo, cob), jnp.float32)],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(*inputs)
+    return out[..., :co]

@@ -58,6 +58,35 @@ def test_dwconv_traffic_is_information_floor():
     assert t.bytes_hbm == floor
 
 
+def test_separable_fused_traffic_strictly_lower():
+    """Fusion acceptance gate: for every MobileNet separable block in the
+    roofline table, the fused kernel's modeled HBM bytes are STRICTLY lower
+    than the unfused composition, and the gap equals the intermediate
+    round-trip when the chooser lands on a single Co panel."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline_table import separable_fusion_rows
+
+    rows = separable_fusion_rows()
+    assert rows, "no separable blocks in the table"
+    for r in rows:
+        assert r["fusible"], r
+        assert r["fused_mb"] < r["unfused_mb"], r
+        assert r["ai_fused"] > r["ai_unfused"], r
+
+
+def test_separable_fused_removes_intermediate_term():
+    """Single-Co-panel case: unfused - fused >= one full intermediate
+    round-trip (store + load of B*Ho*Wo*C)."""
+    b, hi, wi, c, co = 1, 114, 114, 32, 64
+    unf = it.separable_traffic_unfused(b, hi, wi, c, co, 3, 3, 1)
+    fus = it.separable_traffic_fused(b, hi, wi, c, co, 3, 3, 1, block_co=co)
+    inter_roundtrip = 4 * 2 * (b * 112 * 112 * c)  # store + 1 load (n_co=1)
+    assert unf.bytes_hbm - fus.bytes_hbm >= inter_roundtrip
+    assert unf.flops == fus.flops  # fusion moves bytes, not work
+
+
 def test_rowpar_traffic_exceeds_channelpar():
     """The paper's core-inscalability claim, as traffic: row-parallel
     partitioning moves strictly more bytes and the gap grows with p."""

@@ -155,6 +155,64 @@ def test_rtra_oracle_equals_matmul():
 
 
 # ---------------------------------------------------------------------------
+# Edge geometry: block chooser fallbacks, sub-128 Co padding, SAME + stride 2
+# ---------------------------------------------------------------------------
+
+from repro.kernels.dwconv2d import _block_c  # noqa: E402
+
+
+def test_block_c_tiny_vmem_fallback():
+    """_block_c under a tiny budget must drop to the power-of-two lane
+    fallback (< 128), never 0, and the kernel must stay correct there."""
+    # 12 MiB default: full C fits
+    assert _block_c(14, 14, 12, 12, 512) == 512
+    # shrink budget until only a few channels fit: power-of-two fallback
+    cb = _block_c(14, 14, 12, 12, 512, vmem_budget=16 * 1024)
+    assert 1 <= cb < 128 and (cb & (cb - 1)) == 0
+    # budget floor: never returns 0
+    assert _block_c(64, 64, 62, 62, 512, vmem_budget=1) == 1
+    # run the kernel at a forced tiny block (the fallback execution path)
+    x = _arr((1, 9, 9, 12))
+    f = _arr((3, 3, 12))
+    got = dwconv2d_pallas(x, f, stride=1, block_c=2, interpret=True)
+    want = ref.dwconv2d_ref(x, f, stride=1, padding="valid")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_block_c_128_multiple_snapping():
+    """Mid-size budgets snap to a multiple of 128 lanes."""
+    cb = _block_c(28, 28, 26, 26, 1024, vmem_budget=2 * 1024 * 1024)
+    assert cb % 128 == 0 and 128 <= cb < 1024
+
+
+@pytest.mark.parametrize("co", [1, 7, 33, 127])
+def test_pwconv_co_smaller_than_128_padding(co):
+    """Co < 128 forces lane padding of the output tile (bco=max(128,co));
+    the unpadded slice must match the oracle exactly."""
+    x = _arr((40, 64))
+    w = _arr((64, co), scale=0.125)
+    bias = _arr((co,), scale=0.1)
+    got = pwconv_pallas(x, w, bias, activation="relu", interpret=True)
+    want = ref.pwconv_ref(x, w, bias=bias, activation="relu")
+    assert got.shape == (40, co)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("hi,wi,hf", [(11, 13, 3), (14, 14, 5), (7, 9, 3)])
+def test_dwconv2d_same_padding_stride2(hi, wi, hf):
+    """SAME + stride 2: odd/even spatial sizes hit asymmetric pad splits and
+    the VALID-remainder crop inside the kernel wrapper."""
+    c = 10
+    x = _arr((2, hi, wi, c))
+    f = _arr((hf, hf, c))
+    got = ops.dwconv2d(x, f, stride=2, padding="same", impl="pallas",
+                       interpret=True)
+    want = ref.dwconv2d_ref(x, f, stride=2, padding="same")
+    assert got.shape == want.shape == (2, -(-hi // 2), -(-wi // 2), c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # Property-based invariants (hypothesis)
 # ---------------------------------------------------------------------------
 

@@ -6,6 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_mesh_compat
 from repro.models import moe
 
 
@@ -29,8 +30,7 @@ def test_ep_matches_dense_high_capacity():
 
 def test_ep_matches_dense_through_shard_map_1dev():
     cfg, p = _setup(cap=8.0)
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("model",))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 24))
     y_ref, _ = moe.moe_dense_ref(p, x, cfg)
     y_sm, _ = moe.moe_forward(p, x, cfg, mesh=mesh, data_axes=(),
@@ -111,13 +111,13 @@ import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_mesh_compat
 from repro.models import moe
 cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=0,
                 capacity_factor=8.0)
 p = moe.init_moe(jax.random.PRNGKey(0), 24, cfg, 48)
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 24))
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((2, 2), ("data", "model"))
 y_ref, _ = moe.moe_dense_ref(p, x, cfg)
 with mesh:
     fn = jax.jit(lambda p, x: moe.moe_forward(

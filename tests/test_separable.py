@@ -1,0 +1,173 @@
+"""Parity of the fused separable-block kernel (interpret mode) against the
+unfused depthwise2d+pointwise composition and the pure-jnp oracle, plus the
+policy routing through core/separable.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pwconv import KernelPolicy
+from repro.core.separable import (
+    init_inverted_residual,
+    init_separable,
+    inverted_residual,
+    separable_block,
+)
+from repro.kernels import ops, ref
+from repro.kernels.separable_fused import (
+    _block_sizes,
+    separable_fused_pallas,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+# (B, Hi, Wi, C, Co) — odd / non-multiple-of-128 channel counts included
+SWEEP = [
+    (1, 10, 10, 8, 16),
+    (2, 12, 9, 13, 33),      # odd C, odd Co (< 128 lane padding)
+    (1, 9, 9, 130, 64),      # C > 128 -> multi-step reduction
+    (1, 8, 8, 3, 5),         # tiny odd channels
+]
+
+
+@pytest.mark.parametrize("b,hi,wi,c,co", SWEEP)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_fused_matches_ref(b, hi, wi, c, co, stride, dtype):
+    x = _arr((b, hi, wi, c)).astype(dtype)
+    f = _arr((3, 3, c), scale=1 / 3).astype(dtype)
+    w = _arr((c, co), scale=c ** -0.5).astype(dtype)
+    db = _arr((c,), scale=0.1).astype(dtype)
+    pb = _arr((co,), scale=0.1).astype(dtype)
+    got = separable_fused_pallas(
+        x, f, w, db, pb, stride=stride,
+        dw_activation="relu6", activation="relu6", interpret=True)
+    want = ref.separable_fused_ref(
+        x, f, w, db, pb, stride=stride, padding="valid",
+        dw_activation="relu6", activation="relu6")
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,hi,wi,c,co", SWEEP[:3])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_fused_matches_unfused_composition(b, hi, wi, c, co, stride):
+    """The acceptance gate: fused kernel == depthwise2d+pointwise chain
+    within 1e-4 (f32, interpret, SAME padding as the model blocks use)."""
+    x = _arr((b, hi, wi, c))
+    f = _arr((3, 3, c), scale=1 / 3)
+    w = _arr((c, co), scale=c ** -0.5)
+    db = _arr((c,), scale=0.1)
+    pb = _arr((co,), scale=0.1)
+    fused = ops.separable_fused(
+        x, f, w, db, pb, stride=stride, padding="same",
+        dw_activation="relu6", activation="relu6",
+        impl="pallas", interpret=True)
+    y = ops.dwconv2d(x, f, stride=stride, padding="same",
+                     impl="pallas", interpret=True)
+    y = jnp.clip(y + db, 0.0, 6.0)
+    unfused = ops.pwconv(y, w, pb, activation="relu6",
+                         impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("residual", [False, True])
+def test_fused_residual(residual):
+    """Inverted-residual tail: DW -> PW-project (+ residual add) fused."""
+    x = _arr((1, 11, 11, 24))
+    f = _arr((3, 3, 24), scale=1 / 3)
+    w = _arr((24, 24), scale=24 ** -0.5)
+    res = _arr((1, 11, 11, 24)) if residual else None
+    got = ops.separable_fused(
+        x, f, w, None, None, res, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True)
+    want = ref.separable_fused_ref(
+        x, f, w, None, None, res, stride=1, padding="same",
+        dw_activation="relu6", activation=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_separable_block_policy_routing():
+    """core.separable_block(policy.fused) == unfused policy path (f32)."""
+    key = jax.random.PRNGKey(0)
+    params = init_separable(key, 16, 24)
+    x = _arr((1, 14, 14, 16))
+    for stride in (1, 2):
+        base = separable_block(params, x, stride=stride,
+                               policy=KernelPolicy(impl="xla"))
+        fused_xla = separable_block(
+            params, x, stride=stride,
+            policy=KernelPolicy(impl="xla", fused=True))
+        fused_pal = separable_block(
+            params, x, stride=stride,
+            policy=KernelPolicy(impl="pallas", interpret=True, fused=True))
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fused_xla),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fused_pal),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,c_in,c_out", [(1, 8, 8), (2, 8, 16)])
+def test_inverted_residual_policy_routing(stride, c_in, c_out):
+    """V2 block: fused DW->project tail (+residual when stride 1, c_in==c_out)
+    matches the unfused composition."""
+    key = jax.random.PRNGKey(1)
+    params = init_inverted_residual(key, c_in, c_out, expand=4)
+    x = _arr((1, 10, 10, c_in))
+    base = inverted_residual(params, x, stride=stride,
+                             policy=KernelPolicy(impl="xla"))
+    fused = inverted_residual(
+        params, x, stride=stride,
+        policy=KernelPolicy(impl="pallas", interpret=True, fused=True))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fused),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_vmem_fallback_path():
+    """When no fused block shape fits the VMEM budget the op must fall back
+    to the unfused Pallas composition and stay correct."""
+    assert _block_sizes(114, 114, 112, 112, 3000, 3000,
+                        vmem_budget=64 * 1024) is None
+    x = _arr((1, 9, 9, 10))
+    f = _arr((3, 3, 10), scale=1 / 3)
+    w = _arr((10, 12), scale=0.3)
+    db = _arr((10,), scale=0.1)
+    want = ref.separable_fused_ref(
+        x, f, w, db, stride=1, padding="same",
+        dw_activation="relu6", activation=None)
+    # budget too small for any fused blocking -> unfused composition path
+    assert _block_sizes(11, 11, 9, 9, 10, 12, vmem_budget=1024) is None
+    got_fb = ops.separable_fused(
+        x, f, w, db, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True, vmem_budget=1024)
+    np.testing.assert_allclose(np.asarray(got_fb), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # handpicked tiny blocking still fused: multi-panel Co + multi-step C
+    got_tiny = separable_fused_pallas(
+        x, f, w, db, stride=1, dw_activation="relu6", activation=None,
+        block_c=2, block_co=4, interpret=True)
+    want_valid = ref.separable_fused_ref(
+        x, f, w, db, stride=1, padding="valid",
+        dw_activation="relu6", activation=None)
+    np.testing.assert_allclose(np.asarray(got_tiny), np.asarray(want_valid),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_sizes_prefers_single_co_panel():
+    """The chooser targets n_co == 1 (the traffic-optimal case) whenever the
+    accumulator fits; that is what makes fused bytes strictly lower."""
+    picked = _block_sizes(114, 114, 112, 112, 32, 64)
+    assert picked is not None and picked[1] == 64
+    picked = _block_sizes(9, 9, 7, 7, 1024, 1024)
+    assert picked is not None and picked[1] == 1024

@@ -11,6 +11,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
+from repro.launch.mesh import make_mesh_compat
 from repro.models import transformer as T
 from repro.roofline.analysis import (ICI_BW, PEAK_FLOPS, analyze,
                                      model_flops, parse_collectives)
@@ -142,9 +143,9 @@ import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.mesh import make_mesh_compat
 from repro.roofline.analysis import analyze
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((4,), ("model",))
 x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
 w = jax.ShapeDtypeStruct((256, 64), jnp.float32)
 with mesh:
@@ -179,6 +180,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.launch.dryrun import make_rules
+from repro.launch.mesh import make_mesh_compat
 from repro.sharding.rules import use_rules, param_specs, batch_pspecs, named
 
 cfg = get_config("qwen3-1.7b", smoke=True)
@@ -187,8 +189,7 @@ tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
 batch = {"tokens": tokens, "labels": tokens}
 loss1, _ = jax.jit(lambda p, b: T.loss_fn(cfg, p, b))(params, batch)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 rules = make_rules(mesh, mode="train", multi_pod=False)
 with use_rules(rules), mesh:
     pspecs = named(mesh, param_specs(params, rules))
@@ -217,6 +218,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.launch.dryrun import make_rules
+from repro.launch.mesh import make_mesh_compat
 from repro.sharding.rules import use_rules, param_specs, named
 from repro.train.checkpoint import Checkpointer
 
@@ -225,8 +227,7 @@ params = T.init_params(cfg, jax.random.PRNGKey(0))
 d = tempfile.mkdtemp()
 ck = Checkpointer(d)
 ck.save(1, {"params": params})
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 rules = make_rules(mesh, mode="train", multi_pod=False)
 shardings = named(mesh, {"params": param_specs(params, rules)})
 restored, step, _ = ck.restore({"params": params}, shardings=shardings)
