@@ -2,11 +2,14 @@
 
 The paper's register-tiling argument, one level up: BlockSpec shapes
 determine the VMEM working set each kernel *claims*, and the MXU wants
-its matmul dims in multiples of 128. This table enumerates the shipped
-block-shape choices per workload and reports:
+its matmul dims in multiples of 128. This table enumerates the planner's
+block choices (kernels/blocking.py — the single owner of that logic) per
+workload and reports:
 
 * VMEM bytes claimed (incl. 2x input double-buffering where streamed),
+  budgeted at the activation dtype's width — bf16 rows claim ~2x less,
 * whether the MXU-facing dims are 128-aligned,
+* the row-slab split the fused kernel runs at (slab_h x n_slabs),
 * the kernel-level AI (FLOPs per HBM byte) at those blocks,
 * v5e roofline time and the bound (MXU vs HBM).
 
@@ -14,30 +17,33 @@ Structural analysis from the lowering parameters — no TPU needed.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import intensity as it
-from repro.kernels.dwconv2d import _block_c
-from repro.kernels.separable_fused import _block_sizes, _vmem_bytes
+from repro.kernels import blocking
 
 PEAK = 197e12
 HBM = 819e9
 VMEM = 16 * 2**20
 
 
-def dwconv2d_rows(layers) -> list[dict]:
+def dwconv2d_rows(layers, dtype=jnp.float32) -> list[dict]:
+    nb = blocking.dtype_bytes(dtype)
     rows = []
     for l in layers:
         ho = (l.h - l.hf) // l.stride + 1
         wo = (l.w - l.hf) // l.stride + 1
-        cb = _block_c(l.h, l.w, ho, wo, l.c)
-        vmem = (2 * l.h * l.w + ho * wo) * cb * 4 + l.hf * l.hf * cb * 4
-        t = it.dwconv2d_traffic(1, l.h, l.w, l.c, l.hf, l.hf, l.stride)
+        plan = blocking.plan_dwconv2d(l.h, l.w, ho, wo, l.c, l.hf, l.hf,
+                                      dtype=dtype)
+        t = it.dwconv2d_traffic(1, l.h, l.w, l.c, l.hf, l.hf, l.stride,
+                                dtype_bytes=nb)
         tc, tm = t.time_s(PEAK, HBM)
         rows.append({
             "name": l.name,
-            "block_c": cb,
-            "lane_aligned": cb % 128 == 0 or cb == l.c,
-            "vmem_bytes": vmem,
-            "vmem_ok": vmem <= VMEM,
+            "block_c": plan.block_c,
+            "lane_aligned": plan.block_c % 128 == 0 or plan.block_c == l.c,
+            "vmem_bytes": plan.vmem_bytes,
+            "vmem_ok": plan.vmem_bytes <= VMEM,
             "ai_flops_per_byte": t.intensity,
             "bound": "HBM" if tm > tc else "MXU",
             "roofline_us": max(tc, tm) * 1e6,
@@ -45,20 +51,22 @@ def dwconv2d_rows(layers) -> list[dict]:
     return rows
 
 
-def pwconv_rows(layers, bg=256, bco=256, bci=256) -> list[dict]:
+def pwconv_rows(layers, dtype=jnp.float32) -> list[dict]:
+    nb = blocking.dtype_bytes(dtype)
     rows = []
     for l in layers:
         g = l.h * l.w
-        # acc f32 + 2x double-buffered A/B tiles (bf16-widths use 4 here: f32)
-        vmem = (bg * bco * 4) + 2 * (bg * bci + bci * bco) * 4
-        t = it.pwconv_traffic_rtrd(g, l.c_in, l.c_out, bg, bci, bco)
+        plan = blocking.plan_pwconv(g, l.c_in, l.c_out, dtype=dtype)
+        bg, bco, bci = plan.block_g, plan.block_co, plan.block_c
+        t = it.pwconv_traffic_rtrd(g, l.c_in, l.c_out, bg, bci, bco,
+                                   dtype_bytes=nb)
         tc, tm = t.time_s(PEAK, HBM)
         rows.append({
             "name": l.name,
             "blocks": f"{min(bg,g)}x{min(bco,l.c_out)}x{min(bci,l.c_in)}",
             "mxu_aligned": (bco % 128 == 0 and bci % 128 == 0),
-            "vmem_bytes": vmem,
-            "vmem_ok": vmem <= VMEM,
+            "vmem_bytes": plan.vmem_bytes,
+            "vmem_ok": plan.vmem_bytes <= VMEM,
             "ai_flops_per_byte": t.intensity,
             "bound": "HBM" if tm > tc else "MXU",
             "roofline_us": max(tc, tm) * 1e6,
@@ -66,31 +74,37 @@ def pwconv_rows(layers, bg=256, bco=256, bci=256) -> list[dict]:
     return rows
 
 
-def separable_fused_rows(blocks) -> list[dict]:
-    """VMEM claim of the fused DW+PW kernel at the chooser's block shapes:
-    2x input slab + DW intermediate + fp32 accumulator + out tile + 2x W."""
+def separable_fused_rows(blocks, dtype=jnp.float32) -> list[dict]:
+    """VMEM claim of the fused DW+PW kernel at the planner's block shapes
+    (2x input slab + DW intermediate + fp32 accumulator + out tile + 2x W),
+    including the row-slab split that keeps high-resolution blocks fusible."""
     from benchmarks.layers import sep_geometry
 
+    nb = blocking.dtype_bytes(dtype)
     rows = []
     for blk in blocks:
         s = blk.stride
         hi, wi, ho, wo = sep_geometry(blk)
-        picked = _block_sizes(hi, wi, ho, wo, blk.c_in, blk.c_out)
-        if picked is None:
+        plan = blocking.plan_separable(ho, wo, blk.c_in, blk.c_out,
+                                       stride=s, hf=blk.hf, wf=blk.hf,
+                                       dtype=dtype)
+        if plan is None:
             rows.append({"name": blk.name, "fusible": False})
             continue
-        cb, cob = picked
-        vmem = _vmem_bytes(hi, wi, ho, wo, cb, cob)
         t = it.separable_traffic_fused(
-            1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s, block_co=cob)
+            1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
+            block_co=plan.block_co, slab_h=plan.slab_h, dtype_bytes=nb)
         tc, tm = t.time_s(PEAK, HBM)
         rows.append({
             "name": blk.name,
             "fusible": True,
-            "block_c": cb,
-            "block_co": cob,
-            "vmem_bytes": vmem,
-            "vmem_ok": vmem <= VMEM,
+            "block_c": plan.block_c,
+            "block_co": plan.block_co,
+            "slab_h": plan.slab_h,
+            "n_slabs": plan.n_slabs,
+            "halo_rows": plan.halo_rows,
+            "vmem_bytes": plan.vmem_bytes,
+            "vmem_ok": plan.vmem_bytes <= VMEM,
             "ai_flops_per_byte": t.intensity,
             "bound": "HBM" if tm > tc else "MXU",
             "roofline_us": max(tc, tm) * 1e6,
@@ -114,13 +128,18 @@ def csv_rows() -> list[str]:
             f"blocks={r['blocks']};vmem_KiB={r['vmem_bytes']//1024};"
             f"fits={r['vmem_ok']};mxu128={r['mxu_aligned']};"
             f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
-    for r in separable_fused_rows(SEP_SUITES["mobilenet_v1"]):
-        if not r["fusible"]:
-            out.append(f"vmem/sepfused/{r['name']},0.0,fusible=False")
-            continue
-        out.append(
-            f"vmem/sepfused/{r['name']},{r['roofline_us']:.1f},"
-            f"blocks=c{r['block_c']}xco{r['block_co']};"
-            f"vmem_KiB={r['vmem_bytes']//1024};fits={r['vmem_ok']};"
-            f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
+    for suite in ("mobilenet_v1", "hires"):
+        for dt, tag in ((jnp.float32, "sepfused"), (jnp.bfloat16,
+                                                    "sepfused_bf16")):
+            for r in separable_fused_rows(SEP_SUITES[suite], dtype=dt):
+                if not r["fusible"]:
+                    out.append(f"vmem/{tag}/{suite}/{r['name']},0.0,"
+                               "fusible=False")
+                    continue
+                out.append(
+                    f"vmem/{tag}/{suite}/{r['name']},{r['roofline_us']:.1f},"
+                    f"blocks=c{r['block_c']}xco{r['block_co']}"
+                    f"xs{r['slab_h']};n_slabs={r['n_slabs']};"
+                    f"vmem_KiB={r['vmem_bytes']//1024};fits={r['vmem_ok']};"
+                    f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
     return out

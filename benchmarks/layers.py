@@ -160,7 +160,19 @@ MOBILENET_V2_SEP = [
     SepBlock("V2-T7", 7, 7, 960, 320, 1),
 ]
 
+# High-resolution separable blocks (dense-prediction / segmentation-style
+# inputs): Ho*Wo is far above the old ~1.5M-pixel fused-accumulator ceiling,
+# so these were fallback-only before row-slab blocking (DESIGN.md §3). The
+# fused-vs-unfused tables report coverage here to catch regressions of the
+# slab planner.
+HIRES_SEP = [
+    SepBlock("HR-B1", 1504, 1504, 32, 32, 1),
+    SepBlock("HR-B2", 1504, 1504, 32, 64, 2),
+    SepBlock("HR-B3", 2048, 2048, 16, 32, 1),
+]
+
 SEP_SUITES = {
     "mobilenet_v1": MOBILENET_V1_SEP,
     "mobilenet_v2": MOBILENET_V2_SEP,
+    "hires": HIRES_SEP,
 }

@@ -57,41 +57,58 @@ def markdown_table(recs: list[dict], mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
-def separable_fusion_rows() -> list[dict]:
-    """Per-block HBM accounting: unfused = fused + intermediate round-trip.
+def separable_fusion_rows(dtype=None) -> list[dict]:
+    """Per-block HBM accounting: unfused = fused + intermediate round-trip
+    - halo re-reads.
 
     ``intermediate_mb`` is the term the fused kernel removes (the DW output's
-    HBM store + per-Co-panel loads); fused bytes must be strictly lower for
-    every block the chooser can fuse (asserted by tests/test_intensity.py).
+    HBM store + per-Co-panel loads) and ``halo_mb`` the (much smaller) term
+    row-slab blocking adds back at slab seams; fused bytes must be strictly
+    lower for every block the planner can fuse — including the hires suite,
+    which was fallback-only before slabs (asserted by tests/test_intensity.py).
     """
     try:
         from benchmarks.layers import SEP_SUITES, sep_geometry
     except ModuleNotFoundError:  # run as `python benchmarks/roofline_table.py`
         from layers import SEP_SUITES, sep_geometry
-    from repro.kernels.separable_fused import _block_sizes
+    from repro.kernels import blocking
 
+    import jax.numpy as jnp
+    dtype = dtype or jnp.float32
+    nb = blocking.dtype_bytes(dtype)
     rows = []
     for suite, blks in SEP_SUITES.items():
         for blk in blks:
             s = blk.stride
             hi, wi, ho, wo = sep_geometry(blk)
-            picked = _block_sizes(hi, wi, ho, wo, blk.c_in, blk.c_out)
-            bco = picked[1] if picked else blk.c_out
+            plan = blocking.plan_separable(
+                ho, wo, blk.c_in, blk.c_out, stride=s, hf=blk.hf,
+                wf=blk.hf, dtype=dtype)
+            bco = plan.block_co if plan else blk.c_out
+            slab_h = plan.slab_h if plan else None
             unf = it.separable_traffic_unfused(
-                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s)
+                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
+                dtype_bytes=nb)
             fus = it.separable_traffic_fused(
                 1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
-                block_co=bco)
+                block_co=bco, slab_h=slab_h, dtype_bytes=nb)
             inter = it.separable_intermediate_bytes(
-                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s)
+                1, hi, wi, blk.c_in, blk.c_out, blk.hf, blk.hf, s,
+                dtype_bytes=nb)
+            halo = it.separable_slab_halo_bytes(
+                1, wi, blk.c_in, blk.hf, s, plan.n_slabs if plan else 1,
+                -(-blk.c_out // bco), dtype_bytes=nb)
             rows.append({
                 "suite": suite,
                 "name": blk.name,
-                "fusible": picked is not None,
-                "blocks": f"c{picked[0]}xco{picked[1]}" if picked else "-",
+                "fusible": plan is not None,
+                "blocks": (f"c{plan.block_c}xco{plan.block_co}"
+                           f"xs{plan.slab_h}" if plan else "-"),
+                "n_slabs": plan.n_slabs if plan else 0,
                 "unfused_mb": unf.bytes_hbm / 1e6,
                 "fused_mb": fus.bytes_hbm / 1e6,
                 "intermediate_mb": inter / 1e6,
+                "halo_mb": halo / 1e6,
                 "saved_mb": (unf.bytes_hbm - fus.bytes_hbm) / 1e6,
                 "ai_unfused": unf.intensity,
                 "ai_fused": fus.intensity,
@@ -101,15 +118,17 @@ def separable_fusion_rows() -> list[dict]:
 
 def separable_fusion_markdown() -> str:
     lines = [
-        "| block | fused blocks | unfused HBM (MB) | fused HBM (MB) | "
-        "intermediate term (MB) | saved (MB) | AI unfused | AI fused |",
-        "|---|---|---|---|---|---|---|---|",
+        "| block | fused blocks | slabs | unfused HBM (MB) | fused HBM (MB) |"
+        " intermediate term (MB) | halo term (MB) | saved (MB) | AI unfused |"
+        " AI fused |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in separable_fusion_rows():
         lines.append(
-            f"| {r['suite']}/{r['name']} | {r['blocks']} | "
+            f"| {r['suite']}/{r['name']} | {r['blocks']} | {r['n_slabs']} | "
             f"{r['unfused_mb']:.2f} | {r['fused_mb']:.2f} | "
-            f"{r['intermediate_mb']:.2f} | {r['saved_mb']:.2f} | "
+            f"{r['intermediate_mb']:.2f} | {r['halo_mb']:.2f} | "
+            f"{r['saved_mb']:.2f} | "
             f"{r['ai_unfused']:.2f} | {r['ai_fused']:.2f} |")
     return "\n".join(lines)
 

@@ -8,9 +8,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
   "Unoptimized" point).
 * roofline — dominant-term summary per (arch x shape) from the dry-run
   artifacts (if present; run ``python -m repro.launch.dryrun --all`` first).
+
+Flags:
+* ``--full``     — benchmark every layer (default: first 3 per suite).
+* ``--dry-run``  — model-only mode: skip compilation and wall-clock timing
+  (all ``us`` columns are 0.0) but emit every analytical row — planner
+  blocks, traffic, AI, roofline bounds. CI runs this as the traffic-model
+  regression gate.
+* ``--out PATH`` — additionally dump the raw results dict as JSON to PATH
+  (e.g. ``artifacts/bench_results.json``). Without it nothing is written.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -20,11 +30,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
-    quick = "--full" not in sys.argv
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="benchmark every layer, and time the hires suite")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="model-only: no compilation or timing")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write raw results JSON to PATH")
+    args = ap.parse_args()
+
     from benchmarks.paper_figs import run_all
     from benchmarks.roofline_table import csv_rows, load_records
 
-    results = run_all(quick=quick)
+    results = run_all(quick=not args.full, dry_run=args.dry_run)
     rows = []
     for suite in ("mobilenet_v1", "mobilenet_v2", "mnasnet_a1"):
         for r in results[suite]["dw"]:
@@ -37,9 +55,10 @@ def main() -> None:
                 f"pwconv/{suite}/{r['name']},{r['us_xla_cpu']:.1f},"
                 f"AI_rtrd={r['ai_rtrd']:.3f};AI_rtra={r['ai_rtra']:.3f};"
                 f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
+    for suite in ("mobilenet_v1", "mobilenet_v2", "hires"):
         for r in results[suite].get("sep", []):
             if not r["fusible"]:
-                # no fused block shape fits VMEM: the op takes the unfused
+                # no fused block plan fits VMEM: the op takes the unfused
                 # fallback, so a fused-traffic claim would be fiction
                 rows.append(
                     f"sepfused/{suite}/{r['name']},"
@@ -49,6 +68,7 @@ def main() -> None:
             rows.append(
                 f"sepfused/{suite}/{r['name']},{r['us_fused_xla_cpu']:.1f},"
                 f"us_unfused={r['us_unfused_xla_cpu']:.1f};"
+                f"slabs={r['n_slabs']}x{r['slab_h']};"
                 f"MB_unfused={r['bytes_unfused']/1e6:.2f};"
                 f"MB_fused={r['bytes_fused']/1e6:.2f};"
                 f"MB_saved={r['bytes_saved']/1e6:.2f};"
@@ -72,9 +92,10 @@ def main() -> None:
     for row in rows:
         print(row)
 
-    os.makedirs("artifacts", exist_ok=True)
-    with open("artifacts/bench_results.json", "w") as f:
-        json.dump(results, f, indent=2, default=str)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -162,27 +162,54 @@ def separable_traffic_unfused(
     return Traffic(dw.flops + pw.flops, dw.bytes_hbm + pw.bytes_hbm)
 
 
+def separable_slab_halo_bytes(
+    b: int, wi: int, c: int, hf: int, stride: int, n_slabs: int,
+    n_co_panels: int = 1, dtype_bytes: int = 4,
+) -> float:
+    """The price of row-slab blocking: input rows re-fetched at slab seams.
+
+    Adjacent slabs' input windows overlap by ``max(Hf - stride, 0)`` rows,
+    so each of the ``n_slabs - 1`` interior seams re-reads that many rows of
+    ``Wi x C`` input — per Co panel, since the input is streamed once per
+    panel. Zero when unslabbed (n_slabs == 1) or when stride >= Hf (the
+    windows are disjoint)."""
+    halo = max(hf - stride, 0)
+    return float(dtype_bytes * n_co_panels * b * (n_slabs - 1) * halo
+                 * wi * c)
+
+
 def separable_traffic_fused(
     b: int, hi: int, wi: int, c: int, co: int, hf: int, wf: int, stride: int,
-    block_co: int | None = None, dtype_bytes: int = 4,
+    block_co: int | None = None, slab_h: int | None = None,
+    dtype_bytes: int = 4,
 ) -> Traffic:
     """Fused DW+PW kernel (kernels/separable_fused.py): the DW output exists
     only in VMEM. Input streamed once per Co panel (recompute instead of
-    round-trip), PW weight once per batch row-panel, output stored once.
-    With a single Co panel (the chooser's preferred case) this is exactly
-    the unfused traffic minus the intermediate store + re-read."""
+    round-trip), PW weight once per (batch, slab) row-panel, output stored
+    once. With a single Co panel (the planner's preferred case) this is
+    exactly the unfused traffic minus the intermediate store + re-read.
+
+    ``slab_h`` models the row-slab grid dimension (BlockPlan.slab_h): each
+    slab fetches its ``(slab_h-1)*stride + Hf``-row input window, so
+    adjacent slabs re-read a halo counted explicitly by
+    :func:`separable_slab_halo_bytes`; the filter tile is re-fetched per
+    slab and the PW weight is re-streamed per slab (the accumulator now
+    spans one slab, not the whole image). Slabbing moves NO extra flops —
+    every output row is computed exactly once."""
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
     n_co = math.ceil(co / (block_co or co))
+    n_slabs = math.ceil(ho / slab_h) if slab_h else 1
     flops = (n_co * 2.0 * b * ho * wo * c * hf * wf  # DW recomputed per panel
              + 2.0 * b * ho * wo * c * co)           # PW stage
     bytes_ = dtype_bytes * (
-        n_co * b * hi * wi * c       # input slab, once per Co panel
-        + n_co * b * hf * wf * c     # DW filter tile (revisited per panel)
-        + b * c * co                 # PW weight, once per batch row-panel
-        + b * ho * wo * co           # output stored once
+        n_co * b * hi * wi * c                # input slab, once per Co panel
+        + n_co * n_slabs * b * hf * wf * c    # DW filter tile per grid cell
+        + n_slabs * b * c * co                # PW weight per (batch, slab)
+        + b * ho * wo * co                    # output stored once
         # intermediate term: 0 — never leaves VMEM (DESIGN.md §3)
-    )
+    ) + separable_slab_halo_bytes(b, wi, c, hf, stride, n_slabs, n_co,
+                                  dtype_bytes)
     return Traffic(flops, bytes_)
 
 

@@ -23,13 +23,15 @@ class KernelPolicy:
     fused: run depthwise-separable blocks through the single-pass fused
     DW+PW kernel (DESIGN.md §3) instead of composing the standalone ops —
     the DW intermediate then never round-trips HBM.
+    block_g/co/ci: explicit GEMM grid overrides; None (default) defers to
+    the dtype-aware planner (kernels/blocking.plan_pwconv, DESIGN.md §4).
     """
     impl: str = "auto"
     interpret: bool = False
     fused: bool = False
-    block_g: int = 256
-    block_co: int = 256
-    block_ci: int = 256
+    block_g: Optional[int] = None
+    block_co: Optional[int] = None
+    block_ci: Optional[int] = None
 
     def resolved(self) -> str:
         return (

@@ -1,0 +1,274 @@
+"""Unified dtype-aware block planner for the Pallas kernels (DESIGN.md §4).
+
+The paper's core argument — pick blockings that pin the working set at the
+fastest memory level and write each output exactly once — used to be
+re-derived separately by ``dwconv2d._block_c``, ``separable_fused._snap`` /
+``_co_candidates`` / ``_block_sizes`` and ``pwconv``'s fixed grid defaults,
+each budgeting at fp32 widths.  This module is the single owner of that
+logic:
+
+* **dtype-aware VMEM budgeting** — streamed operands (input slabs, filter
+  and weight tiles, output tiles) are costed at ``dtype.itemsize`` bytes;
+  only the accumulators are pinned at fp32 (``ACC_BYTES``), matching what
+  the kernels actually allocate.  bf16 working sets therefore claim ~2x
+  less than the old fp32-only math and the planner can afford larger
+  blocks.
+* **channel / Co-panel enumeration** — ``snap_channels`` and
+  ``co_candidates`` (strictly descending, deduplicated) shared by every
+  consumer.
+* **spatial row-slab blocking with halo** — ``plan_separable`` adds an
+  output-row slab dimension: when the full ``(Ho·Wo, Cob)`` accumulator
+  panel cannot fit VMEM, the image is cut into ``n_slabs`` slabs of
+  ``slab_h`` output rows whose *input* fetches overlap by
+  ``halo_rows = Hf - stride`` rows at each interior seam.  This lifts the
+  old ~1.5M-pixel fused-kernel ceiling: any resolution now yields a real
+  :class:`BlockPlan` instead of the unfused fallback.
+
+Consumers: ``kernels/dwconv2d.py`` (``plan_dwconv2d``),
+``kernels/separable_fused.py`` + ``kernels/ops.py`` (``plan_separable``),
+``kernels/ops.py::pwconv`` (``plan_pwconv``), and the analysis layer
+(``benchmarks/kernel_vmem.py``, ``benchmarks/roofline_table.py``,
+``core/intensity.py`` consumers report the planner's choices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+#: Default HBM->VMEM working-set budget a single kernel may claim. 12 MiB of
+#: the ~16 MiB/core leaves headroom for Mosaic's own spills and semaphores.
+DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024
+
+#: Accumulators are always fp32 scratch regardless of the activation dtype.
+ACC_BYTES = 4
+
+#: TPU lane count — the minor-dim vector width every block snaps to.
+LANES = 128
+
+
+def dtype_bytes(dtype) -> int:
+    """Element width the planner budgets streamed operands at."""
+    return jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """One kernel invocation's block choices + the VMEM claim behind them.
+
+    Which fields a kernel consumes (DESIGN.md §4):
+
+    * ``dwconv2d``          — ``block_c`` only (``slab_h`` == Ho, one slab).
+    * ``separable_fused``   — ``block_c``, ``block_co``, ``slab_h`` /
+      ``n_slabs`` / ``halo_rows`` (the row-slab grid dimension).
+    * ``pwconv``            — ``block_g``, ``block_c`` (= Ci block),
+      ``block_co``.
+
+    ``vmem_bytes`` is the claimed working set at these blocks and
+    ``dtype_bytes`` the streamed-element width it was budgeted at; both are
+    reported by ``benchmarks/kernel_vmem.py``.
+    """
+    block_c: int            # channel slab (DW lanes / GEMM reduction block)
+    block_co: int           # output-channel panel (0: op has no Co dim)
+    slab_h: int             # output rows per spatial slab
+    n_slabs: int            # ceil(Ho / slab_h)
+    halo_rows: int          # input rows re-fetched per interior slab seam
+    vmem_bytes: int         # claimed working set at these blocks
+    dtype_bytes: int        # streamed-element width budgeted
+    block_g: int = 0        # GEMM row-panel (pwconv only)
+
+    def co_panels(self, co: int) -> int:
+        """Number of output-channel panels this plan splits ``co`` into."""
+        return -(-co // self.block_co) if self.block_co else 1
+
+
+def snap_channels(cb: int, c: int) -> int:
+    """Snap a raw channel-count budget to a usable block: all of ``c``, a
+    multiple of 128 lanes, or the tiny-VMEM power-of-two fallback (correct
+    everywhere; only lane utilization suffers — DESIGN.md §2)."""
+    if c <= cb:
+        return c
+    if cb >= LANES:
+        return (cb // LANES) * LANES
+    p = 1
+    while p * 2 <= cb:
+        p *= 2
+    return p
+
+
+def co_candidates(co: int) -> list[int]:
+    """Strictly descending, deduplicated Co-panel candidates: all of Co
+    first (single panel — the traffic-optimal case), then multiples of 128,
+    then powers of two.  Replaces ``separable_fused._co_candidates``, which
+    could emit interleaved/duplicate entries."""
+    cands = {co}
+    k = ((co - 1) // LANES) * LANES
+    while k >= LANES:
+        cands.add(k)
+        k -= LANES
+    p = 64
+    while p >= 1:
+        if p < co:
+            cands.add(p)
+        p //= 2
+    return sorted(cands, reverse=True)
+
+
+def slab_candidates(ho: int) -> list[int]:
+    """Descending output-row slab heights: the whole image first (no
+    slabbing, no halo), then powers of two.  Strictly descending and
+    deduplicated like :func:`co_candidates`."""
+    cands = {ho}
+    p = 1
+    while p * 2 < ho:
+        p *= 2
+    while p >= 1:
+        cands.add(p)
+        p //= 2
+    return sorted(cands, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# dwconv2d
+# ---------------------------------------------------------------------------
+
+def dwconv2d_vmem_bytes(hi: int, wi: int, ho: int, wo: int, cb: int,
+                        hf: int = 3, wf: int = 3,
+                        itemsize: int = 4) -> int:
+    """Working set of ``dwconv2d`` at channel block ``cb``: 2x double-
+    buffered input slab + filter tile (streamed at ``itemsize``), fp32
+    output accumulator."""
+    return cb * (2 * hi * wi * itemsize + hf * wf * itemsize
+                 + ho * wo * ACC_BYTES)
+
+
+def plan_dwconv2d(hi: int, wi: int, ho: int, wo: int, c: int,
+                  hf: int = 3, wf: int = 3, *,
+                  dtype=jnp.float32,
+                  vmem_budget: int = DEFAULT_VMEM_BUDGET) -> BlockPlan:
+    """Channel-block plan for the depthwise kernel (replaces
+    ``dwconv2d._block_c``, now budgeting at ``dtype.itemsize``)."""
+    nb = dtype_bytes(dtype)
+    per_c = dwconv2d_vmem_bytes(hi, wi, ho, wo, 1, hf, wf, nb)
+    cb = snap_channels(max(1, vmem_budget // max(per_c, 1)), c)
+    return BlockPlan(
+        block_c=cb, block_co=0, slab_h=ho, n_slabs=1, halo_rows=0,
+        vmem_bytes=dwconv2d_vmem_bytes(hi, wi, ho, wo, cb, hf, wf, nb),
+        dtype_bytes=nb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused separable block (DW -> act -> PW)
+# ---------------------------------------------------------------------------
+
+def fused_vmem_bytes(wo: int, slab_h: int, cb: int, cob: int,
+                     hf: int = 3, wf: int = 3, stride: int = 1,
+                     itemsize: int = 4, residual: bool = False) -> int:
+    """Working-set bytes of the fused kernel at blocks
+    ``(cb, cob, slab_h)``: fp32 accumulator + output tile (+ 2x residual
+    tile), and per channel slab the 2x double-buffered input slab, the DW
+    intermediate (fp32 value), the filter tile and 2x the PW weight tile.
+    The single source of truth for :func:`plan_separable` and
+    ``benchmarks/kernel_vmem.py``."""
+    slab_hi = (slab_h - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    out_side = slab_h * wo * cob * (ACC_BYTES + itemsize)
+    if residual:
+        out_side += 2 * slab_h * wo * cob * itemsize
+    per_c = (2 * slab_hi * wiu * itemsize       # input slab, double-buffered
+             + hf * wf * itemsize               # DW filter tile
+             + slab_h * wo * ACC_BYTES          # DW intermediate (fp32 value)
+             + 2 * cob * itemsize)              # PW weight tile, dbl-buffered
+    return out_side + cb * per_c
+
+
+def _fused_plan_at(ho: int, wo: int, c: int, slab_h: int, cob: int,
+                   hf: int, wf: int, stride: int, itemsize: int,
+                   residual: bool, vmem_budget: int,
+                   min_cb: int) -> Optional[int]:
+    """Largest snapped channel block >= min_cb fitting the budget, or None."""
+    base = fused_vmem_bytes(wo, slab_h, 0, cob, hf, wf, stride, itemsize,
+                            residual)
+    per_c = fused_vmem_bytes(wo, slab_h, 1, cob, hf, wf, stride, itemsize,
+                             residual) - base
+    rem = vmem_budget - base
+    if rem < per_c:
+        return None
+    cb = snap_channels(int(rem // per_c), c)
+    return cb if cb >= min_cb else None
+
+
+def plan_separable(ho: int, wo: int, c: int, co: int, *,
+                   stride: int = 1, hf: int = 3, wf: int = 3,
+                   dtype=jnp.float32,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   residual: bool = False) -> Optional[BlockPlan]:
+    """Block plan for the fused separable kernel, or None when nothing fits.
+
+    Preference order (traffic-motivated, DESIGN.md §3):
+
+    1. a **single Co panel** — splitting Co replays the input stream and the
+       DW compute per panel, the costliest re-read;
+    2. the **largest row slab** — slabbing only re-fetches
+       ``halo_rows = Hf - stride`` input rows per interior seam, the
+       cheapest re-read, so it is the dimension of last resort *within* a
+       Co choice but always preferred over splitting Co;
+    3. the **largest channel slab** that still fits, full-lane (>= 128 or
+       all of C) if possible, power-of-two fallback otherwise.
+
+    Returns None only when even ``(cb=1, cob=1, slab_h=1)`` exceeds the
+    budget — with row slabs there is no resolution-driven ceiling anymore.
+    """
+    nb = dtype_bytes(dtype)
+    halo = max(hf - stride, 0)
+    # Co outermost so a single panel always wins over splitting Co; within a
+    # panel choice, prefer a full-lane channel block (min_cb pass 1) over a
+    # larger slab with degenerate lanes, then take anything that fits.
+    for cob in co_candidates(co):
+        for min_cb in (min(c, LANES), 1):
+            for slab_h in slab_candidates(ho):
+                cb = _fused_plan_at(ho, wo, c, slab_h, cob, hf, wf, stride,
+                                    nb, residual, vmem_budget, min_cb)
+                if cb is None:
+                    continue
+                n_slabs = -(-ho // slab_h)
+                return BlockPlan(
+                    block_c=cb, block_co=cob, slab_h=slab_h,
+                    n_slabs=n_slabs,
+                    halo_rows=halo if n_slabs > 1 else 0,
+                    vmem_bytes=fused_vmem_bytes(
+                        wo, slab_h, cb, cob, hf, wf, stride, nb, residual),
+                    dtype_bytes=nb,
+                )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pwconv (output-stationary GEMM)
+# ---------------------------------------------------------------------------
+
+def pwconv_vmem_bytes(bg: int, bci: int, bco: int, itemsize: int = 4) -> int:
+    """Working set of the RTRD GEMM: fp32 accumulator + 2x double-buffered
+    streamed A/B tiles at the activation width."""
+    return bg * bco * ACC_BYTES + 2 * (bg * bci + bci * bco) * itemsize
+
+
+def plan_pwconv(g: int, ci: int, co: int, *,
+                dtype=jnp.float32,
+                vmem_budget: int = DEFAULT_VMEM_BUDGET) -> BlockPlan:
+    """Grid plan for the pointwise GEMM (owns what used to be ``pwconv``'s
+    hard-coded 256^3 defaults).  Co/Ci blocks stay MXU-aligned multiples of
+    128; the G panel grows when the dtype is narrow (bf16 tiles cost half,
+    so the same budget affords a 2x taller output panel)."""
+    nb = dtype_bytes(dtype)
+    bco = bci = 2 * LANES
+    for bg in (1024, 512, 256, 128, 64, 32, 16, 8):
+        if pwconv_vmem_bytes(bg, bci, bco, nb) <= vmem_budget:
+            break
+    return BlockPlan(
+        block_c=bci, block_co=bco, slab_h=0, n_slabs=1, halo_rows=0,
+        vmem_bytes=pwconv_vmem_bytes(bg, bci, bco, nb),
+        dtype_bytes=nb, block_g=bg,
+    )

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocking
+
 
 def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
                  out_dtype):
@@ -52,27 +54,6 @@ def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
     out_ref[0] = acc.astype(out_dtype)         # single store (lines 29-34)
 
 
-def _block_c(hi: int, wi: int, ho: int, wo: int, c: int,
-             vmem_budget: int = 12 * 1024 * 1024) -> int:
-    """Largest channel block (multiple of 128, or c) fitting the VMEM budget.
-
-    Working set per channel block: input + output fp32 + filter (negligible),
-    with 2x for double buffering of the input stream.
-    """
-    per_c = (2 * hi * wi + ho * wo) * 4
-    cb = max(1, vmem_budget // max(per_c, 1))
-    if c <= cb:
-        return c
-    if cb >= 128:
-        return (cb // 128) * 128
-    # tiny-VMEM fallback: power-of-two lanes (correct everywhere; only lane
-    # utilization suffers — noted in DESIGN.md §2)
-    p = 1
-    while p * 2 <= cb:
-        p *= 2
-    return p
-
-
 @functools.partial(jax.jit, static_argnames=("stride", "interpret", "block_c"))
 def dwconv2d_pallas(
     x: jax.Array,
@@ -90,7 +71,11 @@ def dwconv2d_pallas(
     wo = (wi - wf) // stride + 1
     assert ho >= 1 and wo >= 1, "input smaller than filter"
 
-    cb = block_c or _block_c(hi, wi, ho, wo, c)
+    if block_c is None:
+        # dtype-aware channel-block plan (kernels/blocking.py owns the math)
+        block_c = blocking.plan_dwconv2d(
+            hi, wi, ho, wo, c, hf, wf, dtype=x.dtype).block_c
+    cb = block_c
     pad = (-c) % cb
     if pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))

@@ -17,11 +17,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import blocking, ref
 from repro.kernels.dwconv1d import dwconv1d_causal_pallas
 from repro.kernels.dwconv2d import dwconv2d_pallas
 from repro.kernels.pwconv import pwconv_pallas
-from repro.kernels.separable_fused import _block_sizes, separable_fused_pallas
+from repro.kernels.separable_fused import separable_fused_pallas
 
 
 def _resolve(impl: str) -> str:
@@ -94,13 +94,16 @@ def separable_fused(
     activation: Optional[str] = None,
     impl: str = "auto",
     interpret: bool = False,
-    vmem_budget: int = 12 * 1024 * 1024,
+    vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
 ) -> jax.Array:
     """Fused depthwise-separable block: DW -> act -> PW in one kernel pass.
 
     x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co) -> (B,Ho,Wo,Co). On the
-    pallas path the DW intermediate never touches HBM (DESIGN.md §3); when
-    no fused block shape fits the VMEM budget, falls back to the unfused
+    pallas path the DW intermediate never touches HBM (DESIGN.md §3). Block
+    shapes — including the row-slab dimension that keeps the accumulator
+    VMEM-sized at any resolution — come from
+    :func:`repro.kernels.blocking.plan_separable`; only when even the
+    minimal plan exceeds the budget does the op fall back to the unfused
     Pallas composition. The fallback is semantically the same block but
     rounds the DW intermediate to the activation dtype between the two
     kernels (the fused path keeps it fp32 into the GEMM), so sub-fp32
@@ -122,14 +125,13 @@ def separable_fused(
     hi, wi = x.shape[1], x.shape[2]
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
-    hiu = (ho - 1) * stride + hf
-    wiu = (wo - 1) * stride + wf
-    blocks = _block_sizes(hiu, wiu, ho, wo, x.shape[-1], pw_w.shape[-1],
-                          vmem_budget=vmem_budget,
-                          residual=residual is not None)
-    if blocks is None:
-        # Accumulator panel cannot fit VMEM at any block shape: compose the
-        # standalone kernels instead (correct, just not fused).
+    plan = blocking.plan_separable(
+        ho, wo, x.shape[-1], pw_w.shape[-1], stride=stride, hf=hf, wf=wf,
+        dtype=x.dtype, vmem_budget=vmem_budget,
+        residual=residual is not None)
+    if plan is None:
+        # Even the minimal (cb=1, cob=1, slab_h=1) plan exceeds the budget:
+        # compose the standalone kernels instead (correct, just not fused).
         y = dwconv2d_pallas(x, dw_f, stride=stride, interpret=interpret)
         if dw_bias is not None:
             y = y + dw_bias
@@ -144,7 +146,8 @@ def separable_fused(
     return separable_fused_pallas(
         x, dw_f, pw_w, dw_bias, pw_bias, residual,
         stride=stride, dw_activation=dw_activation, activation=activation,
-        block_c=blocks[0], block_co=blocks[1], interpret=interpret,
+        block_c=plan.block_c, block_co=plan.block_co, slab_h=plan.slab_h,
+        interpret=interpret,
     )
 
 
@@ -156,16 +159,26 @@ def pwconv(
     activation: Optional[str] = None,
     impl: str = "auto",
     interpret: bool = False,
-    block_g: int = 256,
-    block_co: int = 256,
-    block_ci: int = 256,
+    block_g: int | None = None,
+    block_co: int | None = None,
+    block_ci: int | None = None,
 ) -> jax.Array:
-    """Pointwise conv / GEMM over the last axis. x (..., Ci), w (Ci, Co)."""
+    """Pointwise conv / GEMM over the last axis. x (..., Ci), w (Ci, Co).
+
+    Block shapes default to :func:`repro.kernels.blocking.plan_pwconv`
+    (dtype-aware MXU-aligned grid); explicit overrides win.
+    """
     impl = _resolve(impl)
     if impl == "xla":
         return ref.pwconv_ref(x, w, bias=bias, activation=activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    if block_g is None or block_co is None or block_ci is None:
+        plan = blocking.plan_pwconv(x2.shape[0], w.shape[0], w.shape[1],
+                                    dtype=x.dtype)
+        block_g = block_g or plan.block_g
+        block_co = block_co or plan.block_co
+        block_ci = block_ci or plan.block_c
     y = pwconv_pallas(
         x2, w, bias,
         activation=activation,

@@ -13,25 +13,42 @@ in ONE grid pass. The DW output tile is produced in VMEM and immediately
 consumed as the A-operand of the output-stationary PW reduction; it never
 exists in HBM.
 
-Grid and residency (mirrors ``pwconv``'s RTRD structure):
+Grid and residency (mirrors ``pwconv``'s RTRD structure, plus a spatial
+slab dimension):
 
-* grid ``(B, Co/Cob, C/Cb)`` with the channel reduction **innermost** and the
-  output BlockSpec ignoring it — the fp32 accumulator ``(Ho*Wo, Cob)`` stays
-  VMEM-resident across the whole reduction and is stored exactly once.
-* per reduction step, the kernel runs the ``dwconv2d`` shift-and-FMA over one
-  channel slab (VPU work), applies bias+activation, reshapes to
-  ``(Ho*Wo, Cb)`` and feeds the MXU matmul against the ``(Cb, Cob)`` weight
-  tile. DW output lives only as that VMEM value.
+* grid ``(B, n_slabs, Co/Cob, C/Cb)`` with the channel reduction
+  **innermost** and the output BlockSpec ignoring it — the fp32 accumulator
+  ``(slab_h*Wo, Cob)`` stays VMEM-resident across the whole reduction of
+  its slab and is stored exactly once.
+* the **row-slab dimension** bounds the accumulator: each grid cell owns
+  ``slab_h`` output rows, and the input BlockSpec (``pl.unblocked``
+  element-offset indexing) fetches the overlapping
+  ``(slab_h-1)*stride + Hf`` input-row window for that slab — adjacent
+  slabs re-fetch a ``Hf - stride`` row halo at each interior seam. This is
+  what lifts the old ~1.5M-pixel accumulator ceiling (DESIGN.md §3): any
+  resolution now fuses, at the cost of the (tiny) halo re-read counted in
+  ``core.intensity.separable_traffic_fused``.
+* per reduction step, the kernel runs the ``dwconv2d`` shift-and-FMA over
+  one channel slab (VPU work), applies bias+activation, reshapes to
+  ``(slab_h*Wo, Cb)`` and feeds the MXU matmul against the ``(Cb, Cob)``
+  weight tile. DW output lives only as that VMEM value.
 
 Traffic win (``core.intensity.separable_traffic_*``): with a single Co panel
-(the common MobileNet case — the chooser below targets it) the fused block
-removes exactly the intermediate round-trip, ``2 * B*Ho*Wo*C * dtype`` bytes.
-Channel padding is harmless for any activation: padded DW channels multiply
-zero-padded PW weight rows, so their contribution is exactly zero.
+(the common MobileNet case — the planner targets it) the fused block removes
+exactly the intermediate round-trip, ``2 * B*Ho*Wo*C * dtype`` bytes, minus
+the halo re-reads when slabbed. Channel padding is harmless for any
+activation: padded DW channels multiply zero-padded PW weight rows, so their
+contribution is exactly zero. Row padding (when ``slab_h`` does not divide
+``Ho``) computes zero-input garbage rows that are cropped before return.
 
-When fusion is NOT profitable or feasible (``_block_sizes`` returns None —
-the ``Ho*Wo`` accumulator panel cannot fit VMEM even at the smallest blocks),
-callers fall back to the unfused composition; see ``ops.separable_fused``.
+All block choices come from ``kernels.blocking.plan_separable`` (dtype-aware
+VMEM budget, Co-panel and row-slab enumeration); when even the minimal plan
+exceeds the budget the planner returns None and callers fall back to the
+unfused composition (``ops.separable_fused``).
+
+TPU note: the overlapping input windows use ``pl.unblocked`` indexing,
+validated in interpret mode like the rest of this package; Mosaic sublane
+alignment of un-tiled row offsets is part of the ROADMAP hardware item.
 """
 from __future__ import annotations
 
@@ -43,73 +60,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocking
 from repro.kernels.pwconv import _epilogue
-
-
-def _snap(cb: int, c: int) -> int:
-    """Snap a raw channel-count budget to a usable block: all of ``c``, a
-    multiple of 128 lanes, or the tiny-VMEM power-of-two fallback — the same
-    preference order as ``dwconv2d._block_c``."""
-    if c <= cb:
-        return c
-    if cb >= 128:
-        return (cb // 128) * 128
-    p = 1
-    while p * 2 <= cb:
-        p *= 2
-    return p
-
-
-def _co_candidates(co: int) -> list[int]:
-    """Descending Co-block candidates: all of Co first (single panel — the
-    traffic-optimal case), then multiples of 128, then powers of two."""
-    cands = [co]
-    k = ((co - 1) // 128) * 128
-    while k >= 128:
-        cands.append(k)
-        k -= 128
-    p = 64
-    while p >= 1:
-        if p < co:
-            cands.append(p)
-        p //= 2
-    return cands
-
-
-def _vmem_bytes(hiu: int, wiu: int, ho: int, wo: int, cb: int, cob: int,
-                residual: bool = False) -> int:
-    """fp32 working-set bytes of the fused kernel at blocks ``(cb, cob)``:
-    2x double-buffered input slab + DW intermediate + fp32 accumulator +
-    output tile + 2x PW weight tile (+ residual input tile). The single
-    source of truth for the chooser below and benchmarks/kernel_vmem.py."""
-    out_side = (2 + (2 if residual else 0)) * ho * wo * cob * 4
-    per_c = (2 * hiu * wiu + ho * wo + 2 * cob) * 4
-    return out_side + cb * per_c
-
-
-def _block_sizes(
-    hiu: int, wiu: int, ho: int, wo: int, c: int, co: int,
-    vmem_budget: int = 12 * 1024 * 1024,
-    residual: bool = False,
-) -> Optional[tuple[int, int]]:
-    """Pick ``(block_c, block_co)`` fitting the VMEM budget, or None.
-
-    fp32 accounting via :func:`_vmem_bytes`, consistent with
-    ``dwconv2d._block_c``. Prefers a single Co panel (block_co=co), then the
-    largest channel slab that still fits.
-    """
-    for cob in _co_candidates(co):
-        base = _vmem_bytes(hiu, wiu, ho, wo, 0, cob, residual=residual)
-        rem = vmem_budget - base
-        if rem <= 0:
-            continue
-        per_c = _vmem_bytes(hiu, wiu, ho, wo, 1, cob) - _vmem_bytes(
-            hiu, wiu, ho, wo, 0, cob)
-        cb_raw = rem // per_c
-        if cb_raw < 1:
-            continue
-        return _snap(int(cb_raw), c), cob
-    return None
 
 
 def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
@@ -117,9 +69,10 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
                   has_res: bool, out_dtype):
     """refs = (x, f, [dw_bias,] w, [pw_bias,] [residual,] out, acc).
 
-    Blocks: x (1, Hiu, Wiu, Cb); f (Hf, Wf, Cb); dw_bias (1, Cb);
-    w (Cb, Cob); pw_bias (1, Cob); residual (1, Ho, Wo, Cob);
-    out (1, Ho, Wo, Cob); acc VMEM scratch (Ho*Wo, Cob) fp32.
+    Blocks: x (1, slab_hi, Wiu, Cb) — the overlapping input window of this
+    row slab; f (Hf, Wf, Cb); dw_bias (1, Cb); w (Cb, Cob); pw_bias
+    (1, Cob); residual (1, slab_h, Wo, Cob); out (1, slab_h, Wo, Cob);
+    acc VMEM scratch (slab_h*Wo, Cob) fp32.
     """
     it = iter(refs)
     x_ref = next(it)
@@ -131,9 +84,9 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
     out_ref = next(it)
     acc_ref = next(it)
 
-    _, ho, wo, cob = out_ref.shape
+    _, slab_h, wo, cob = out_ref.shape
     cb = x_ref.shape[3]
-    k = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
@@ -143,13 +96,13 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
     x = x_ref[0].astype(jnp.float32)
     f = f_ref[...].astype(jnp.float32)
     s = stride
-    dw = jnp.zeros((ho, wo, cb), jnp.float32)
+    dw = jnp.zeros((slab_h, wo, cb), jnp.float32)
     for n in range(hf):
         for m in range(wf):
             win = jax.lax.slice(
                 x,
                 (n, m, 0),
-                (n + (ho - 1) * s + 1, m + (wo - 1) * s + 1, cb),
+                (n + (slab_h - 1) * s + 1, m + (wo - 1) * s + 1, cb),
                 (s, s, 1),
             )
             dw = dw + win * f[n, m][None, None, :]
@@ -159,19 +112,19 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
     )
 
     # --- PW stage: DW tile (VMEM value, never stored) is the A-operand ---
-    a = dw.reshape(ho * wo, cb)
+    a = dw.reshape(slab_h * wo, cb)
     acc_ref[...] += jnp.dot(
         a, w_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
     )
 
     @pl.when(k == nk - 1)
-    def _store():  # single store of the block output
+    def _store():  # single store of the slab's output block
         acc = _epilogue(
             acc_ref[...],
             pwb_ref[...] if pwb_ref is not None else None,
             activation,
         )
-        y = acc.reshape(ho, wo, cob)
+        y = acc.reshape(slab_h, wo, cob)
         if res_ref is not None:
             y = y + res_ref[0].astype(jnp.float32)
         out_ref[0] = y.astype(out_dtype)
@@ -180,7 +133,7 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "dw_activation", "activation", "block_c",
-                     "block_co", "interpret"),
+                     "block_co", "slab_h", "interpret"),
 )
 def separable_fused_pallas(
     x: jax.Array,
@@ -195,14 +148,17 @@ def separable_fused_pallas(
     activation: Optional[str] = None,
     block_c: int | None = None,
     block_co: int | None = None,
+    slab_h: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused DW+PW block. x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co)
     [+ dw_bias (C,), pw_bias (Co,), residual (B,Ho,Wo,Co)] -> (B,Ho,Wo,Co).
 
     VALID geometry — SAME padding is applied by the wrapper (ops.py).
-    Raises ValueError when no block shape fits VMEM (callers should have
-    consulted :func:`_block_sizes` and taken the unfused path instead).
+    Block shapes not given explicitly come from
+    :func:`repro.kernels.blocking.plan_separable`; raises ValueError when
+    even the minimal plan exceeds the VMEM budget (callers should have
+    consulted the planner and taken the unfused path instead).
     """
     b, hi, wi, c = x.shape
     hf, wf, cf = dw_f.shape
@@ -214,17 +170,24 @@ def separable_fused_pallas(
     hiu = (ho - 1) * stride + hf
     wiu = (wo - 1) * stride + wf
 
-    if block_c is None or block_co is None:
-        picked = _block_sizes(hiu, wiu, ho, wo, c, co)
-        if picked is None:
+    if block_c is None or block_co is None or slab_h is None:
+        plan = blocking.plan_separable(
+            ho, wo, c, co, stride=stride, hf=hf, wf=wf, dtype=x.dtype,
+            residual=residual is not None)
+        if plan is None and (block_c is None or block_co is None):
             raise ValueError(
-                f"no fused block shape fits VMEM for {(hi, wi, c, co)}; "
+                f"no fused block plan fits VMEM for {(hi, wi, c, co)}; "
                 "use the unfused composition (ops.separable_fused does this)"
             )
-        cb = block_c or picked[0]
-        cob = block_co or picked[1]
+        cb = block_c or plan.block_c
+        cob = block_co or plan.block_co
+        sh = slab_h or (plan.slab_h if plan is not None else ho)
     else:
-        cb, cob = block_c, block_co
+        cb, cob, sh = block_c, block_co, slab_h
+    sh = min(sh, ho)
+    n_slabs = -(-ho // sh)
+    ho_p = n_slabs * sh
+    slab_hi = (sh - 1) * stride + hf
 
     # Channel / Co padding (zero rows of pw_w nullify padded DW channels).
     pad_c = (-c) % cb
@@ -239,30 +202,42 @@ def separable_fused_pallas(
         pw_w = jnp.pad(pw_w, ((0, 0), (0, pad_co)))
         if pw_bias is not None:
             pw_bias = jnp.pad(pw_bias, ((0, pad_co),))
-        if residual is not None:
-            residual = jnp.pad(
-                residual, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+    if pad_co and residual is not None:
+        residual = jnp.pad(residual, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
     cp, cop = c + pad_c, co + pad_co
     nk = cp // cb
 
+    # Row padding so the slab grid tiles Ho: the last slab's window reads
+    # zero rows past the image and its garbage output rows are cropped.
+    rows_in = (ho_p - 1) * stride + hf
     x = x[:, :hiu, :wiu, :]
+    if rows_in > hiu:
+        x = jnp.pad(x, ((0, 0), (0, rows_in - hiu), (0, 0), (0, 0)))
+    if ho_p > ho and residual is not None:
+        residual = jnp.pad(residual, ((0, 0), (0, ho_p - ho), (0, 0), (0, 0)))
 
+    # Input windows of adjacent slabs overlap by (hf - stride) halo rows, so
+    # the x BlockSpec uses element-offset (unblocked) indexing.
     in_specs = [
-        pl.BlockSpec((1, hiu, wiu, cb), lambda i, j, k: (i, 0, 0, k)),
-        pl.BlockSpec((hf, wf, cb), lambda i, j, k: (0, 0, k)),
+        pl.BlockSpec(
+            (1, slab_hi, wiu, cb),
+            lambda i, s, j, k: (i, s * sh * stride, 0, k * cb),
+            indexing_mode=pl.unblocked,
+        ),
+        pl.BlockSpec((hf, wf, cb), lambda i, s, j, k: (0, 0, k)),
     ]
     inputs = [x, dw_f]
     if dw_bias is not None:
-        in_specs.append(pl.BlockSpec((1, cb), lambda i, j, k: (0, k)))
+        in_specs.append(pl.BlockSpec((1, cb), lambda i, s, j, k: (0, k)))
         inputs.append(dw_bias.reshape(1, -1))
-    in_specs.append(pl.BlockSpec((cb, cob), lambda i, j, k: (k, j)))
+    in_specs.append(pl.BlockSpec((cb, cob), lambda i, s, j, k: (k, j)))
     inputs.append(pw_w)
     if pw_bias is not None:
-        in_specs.append(pl.BlockSpec((1, cob), lambda i, j, k: (0, j)))
+        in_specs.append(pl.BlockSpec((1, cob), lambda i, s, j, k: (0, j)))
         inputs.append(pw_bias.reshape(1, -1))
     if residual is not None:
         in_specs.append(
-            pl.BlockSpec((1, ho, wo, cob), lambda i, j, k: (i, 0, 0, j)))
+            pl.BlockSpec((1, sh, wo, cob), lambda i, s, j, k: (i, s, 0, j)))
         inputs.append(residual)
 
     kernel = functools.partial(
@@ -273,21 +248,24 @@ def separable_fused_pallas(
     )
     try:
         compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")
         )
     except AttributeError:
         compiler_params = pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")
         )
 
     out = pl.pallas_call(
         kernel,
-        grid=(b, cop // cob, nk),
+        grid=(b, n_slabs, cop // cob, nk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, ho, wo, cob), lambda i, j, k: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cop), x.dtype),
-        scratch_shapes=[pltpu.VMEM((ho * wo, cob), jnp.float32)],
+        out_specs=pl.BlockSpec((1, sh, wo, cob),
+                               lambda i, s, j, k: (i, s, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho_p, wo, cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((sh * wo, cob), jnp.float32)],
         compiler_params=compiler_params,
         interpret=interpret,
     )(*inputs)
-    return out[..., :co]
+    return out[:, :ho, :, :co]

@@ -1,0 +1,211 @@
+"""Unit tests for the unified dtype-aware block planner
+(src/repro/kernels/blocking.py) — the single owner of VMEM budgeting,
+channel/Co-panel enumeration and row-slab blocking that replaced the
+per-kernel choosers (``dwconv2d._block_c``, ``separable_fused._snap`` /
+``_co_candidates`` / ``_block_sizes``, ``pwconv``'s fixed grid)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import blocking
+
+
+# ---------------------------------------------------------------------------
+# candidate enumerators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("co", [1, 7, 33, 64, 127, 128, 129, 192, 256, 320,
+                                1000, 1024, 3000])
+def test_co_candidates_strictly_descending_deduplicated(co):
+    """The migration fix: the old ``_co_candidates`` could interleave
+    128-multiples with powers of two; the planner's enumerator must be
+    strictly descending with no duplicates, start at Co (the single-panel,
+    traffic-optimal case) and end at a feasible (<= Co) block."""
+    cands = blocking.co_candidates(co)
+    assert cands[0] == co
+    assert all(a > b for a, b in zip(cands, cands[1:])), cands
+    assert len(set(cands)) == len(cands)
+    assert all(1 <= x <= co for x in cands)
+    assert cands[-1] == 1 or co == 1
+
+
+@pytest.mark.parametrize("ho", [1, 2, 7, 8, 56, 112, 1504])
+def test_slab_candidates_strictly_descending(ho):
+    cands = blocking.slab_candidates(ho)
+    assert cands[0] == ho          # whole image first: no halo
+    assert all(a > b for a, b in zip(cands, cands[1:])), cands
+    assert cands[-1] == 1
+
+
+def test_snap_channels_preference_order():
+    """All of C, else multiple of 128 lanes, else power of two."""
+    assert blocking.snap_channels(600, 512) == 512        # all of C
+    assert blocking.snap_channels(300, 512) == 256        # 128-multiple
+    assert blocking.snap_channels(100, 512) == 64         # pow2 fallback
+    assert blocking.snap_channels(1, 512) == 1            # floor
+
+
+# ---------------------------------------------------------------------------
+# dwconv2d plan (replaces dwconv2d._block_c)
+# ---------------------------------------------------------------------------
+
+def test_plan_dwconv2d_full_c_when_it_fits():
+    assert blocking.plan_dwconv2d(14, 14, 12, 12, 512).block_c == 512
+
+
+def test_plan_dwconv2d_tiny_vmem_fallback():
+    cb = blocking.plan_dwconv2d(14, 14, 12, 12, 512,
+                                vmem_budget=16 * 1024).block_c
+    assert 1 <= cb < 128 and (cb & (cb - 1)) == 0
+    assert blocking.plan_dwconv2d(64, 64, 62, 62, 512,
+                                  vmem_budget=1).block_c == 1
+
+
+def test_plan_dwconv2d_128_multiple_snapping():
+    cb = blocking.plan_dwconv2d(28, 28, 26, 26, 1024,
+                                vmem_budget=2 * 1024 * 1024).block_c
+    assert cb % 128 == 0 and 128 <= cb < 1024
+
+
+def test_plan_dwconv2d_bf16_affords_larger_blocks():
+    """ROADMAP item 4: bf16 working sets claim ~2x less, so the same budget
+    affords a larger channel block (the old fp32-only math under-claimed)."""
+    budget = 2 * 1024 * 1024
+    p32 = blocking.plan_dwconv2d(28, 28, 26, 26, 4096, vmem_budget=budget)
+    p16 = blocking.plan_dwconv2d(28, 28, 26, 26, 4096, vmem_budget=budget,
+                                 dtype=jnp.bfloat16)
+    assert p16.block_c > p32.block_c
+    assert p16.dtype_bytes == 2 and p32.dtype_bytes == 4
+    # and at EQUAL blocks the bf16 claim is strictly smaller
+    b32 = blocking.dwconv2d_vmem_bytes(28, 28, 26, 26, 256, itemsize=4)
+    b16 = blocking.dwconv2d_vmem_bytes(28, 28, 26, 26, 256, itemsize=2)
+    assert b16 < b32
+
+
+# ---------------------------------------------------------------------------
+# fused separable plan (replaces separable_fused._block_sizes)
+# ---------------------------------------------------------------------------
+
+def test_plan_separable_prefers_single_co_panel():
+    """The planner targets n_co == 1 (the traffic-optimal case) whenever the
+    accumulator fits; that is what makes fused bytes strictly lower."""
+    p = blocking.plan_separable(112, 112, 32, 64)
+    assert p is not None and p.block_co == 64
+    p = blocking.plan_separable(7, 7, 1024, 1024)
+    assert p is not None and p.block_co == 1024
+
+
+def test_plan_separable_prefers_whole_image_slab_when_it_fits():
+    """No-slabbing (slab_h == Ho) must win at MobileNet resolutions — the
+    seed behavior — since it has zero halo cost."""
+    for ho, c, co in ((112, 32, 64), (56, 128, 128), (14, 512, 512)):
+        p = blocking.plan_separable(ho, ho, c, co)
+        assert p is not None
+        assert p.slab_h == ho and p.n_slabs == 1 and p.halo_rows == 0
+
+
+def test_plan_separable_hires_returns_slab_plan():
+    """Above the old ~1.5M-pixel accumulator ceiling the planner must return
+    a real row-slab plan instead of None (the old unfused fallback)."""
+    p = blocking.plan_separable(1504, 1504, 32, 32)
+    assert p is not None
+    assert p.n_slabs > 1 and p.slab_h * p.n_slabs >= 1504
+    assert p.halo_rows == 2                      # Hf - stride = 3 - 1
+    assert p.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+    # stride-2 halo is 1 row
+    p2 = blocking.plan_separable(752, 752, 32, 64, stride=2)
+    assert p2 is not None and (p2.n_slabs == 1 or p2.halo_rows == 1)
+
+
+def test_plan_separable_bf16_claims_less_and_slabs_less():
+    """bf16 budget accounting (ROADMAP item 4): the same geometry needs
+    fewer/larger slabs and claims fewer bytes per element."""
+    p32 = blocking.plan_separable(1504, 1504, 32, 32)
+    p16 = blocking.plan_separable(1504, 1504, 32, 32, dtype=jnp.bfloat16)
+    assert p16.slab_h >= p32.slab_h
+    assert p16.n_slabs <= p32.n_slabs
+    b32 = blocking.fused_vmem_bytes(1504, 8, 32, 32, itemsize=4)
+    b16 = blocking.fused_vmem_bytes(1504, 8, 32, 32, itemsize=2)
+    assert b16 < b32
+
+
+def test_plan_separable_none_only_below_minimal_plan():
+    """None is reserved for budgets below even (cb=1, cob=1, slab_h=1);
+    row slabs removed the resolution-driven ceiling."""
+    assert blocking.plan_separable(9, 9, 10, 12, vmem_budget=64) is None
+    # a budget that used to be infeasible pre-slabs now yields a plan
+    p = blocking.plan_separable(112, 112, 3000, 3000,
+                                vmem_budget=64 * 1024)
+    assert p is not None and p.n_slabs > 1
+
+
+def test_plan_separable_residual_costs_budget():
+    """The residual tile is part of the claim: at equal blocks it strictly
+    raises the working set, and the plan accounts for it."""
+    pr = blocking.plan_separable(112, 112, 32, 64, residual=True)
+    p = blocking.plan_separable(112, 112, 32, 64, residual=False)
+    assert pr is not None and p is not None
+    assert pr.vmem_bytes > p.vmem_bytes or pr.slab_h < p.slab_h \
+        or pr.block_c < p.block_c
+    assert (blocking.fused_vmem_bytes(112, 112, 32, 64, residual=True)
+            > blocking.fused_vmem_bytes(112, 112, 32, 64, residual=False))
+
+
+# ---------------------------------------------------------------------------
+# pwconv plan
+# ---------------------------------------------------------------------------
+
+def test_plan_pwconv_mxu_aligned_and_within_budget():
+    p = blocking.plan_pwconv(12544, 64, 128)
+    assert p.block_co % 128 == 0 and p.block_c % 128 == 0
+    assert p.block_g >= 8
+    assert p.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+
+
+def test_plan_pwconv_bf16_affords_taller_g_panel():
+    budget = 3 * 1024 * 1024
+    p32 = blocking.plan_pwconv(1 << 20, 1024, 1024, vmem_budget=budget)
+    p16 = blocking.plan_pwconv(1 << 20, 1024, 1024, vmem_budget=budget,
+                               dtype=jnp.bfloat16)
+    assert p16.block_g >= p32.block_g
+    assert p16.vmem_bytes <= budget and p32.vmem_bytes <= budget
+    # at equal blocks, the bf16-budgeted claim is strictly smaller
+    assert (blocking.pwconv_vmem_bytes(256, 256, 256, itemsize=2)
+            < blocking.pwconv_vmem_bytes(256, 256, 256, itemsize=4))
+
+
+# ---------------------------------------------------------------------------
+# claimed-bytes tables (benchmarks/kernel_vmem.py) — bf16 rows shrink
+# ---------------------------------------------------------------------------
+
+def test_kernel_vmem_tables_shrink_for_bf16():
+    """Satellite acceptance: with dtype-aware budgeting the claimed-bytes
+    tables must be strictly smaller for bf16 than fp32 on every row (same
+    blocks => half the streamed bytes; bigger blocks still fit the same
+    budget)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.kernel_vmem import separable_fused_rows
+    from benchmarks.layers import SEP_SUITES
+
+    from benchmarks.layers import sep_geometry
+
+    for suite in ("mobilenet_v1", "hires"):
+        r32 = separable_fused_rows(SEP_SUITES[suite], dtype=jnp.float32)
+        r16 = separable_fused_rows(SEP_SUITES[suite], dtype=jnp.bfloat16)
+        for a, b in zip(r32, r16):
+            assert a["fusible"] and b["fusible"]
+            # bf16 may buy LARGER blocks at the same budget, so compare
+            # like-for-like: every claim stays within the shared budget...
+            assert b["vmem_bytes"] <= blocking.DEFAULT_VMEM_BUDGET
+            # ...and at the fp32 plan's own block shapes the bf16-budgeted
+            # claim strictly shrinks (the fp32-only math under-claimed ~2x).
+            blk = next(x for x in SEP_SUITES[suite] if x.name == a["name"])
+            hi, wi, ho, wo = sep_geometry(blk)
+            b32 = blocking.fused_vmem_bytes(
+                wo, a["slab_h"], a["block_c"], a["block_co"],
+                blk.hf, blk.hf, blk.stride, itemsize=4)
+            b16 = blocking.fused_vmem_bytes(
+                wo, a["slab_h"], a["block_c"], a["block_co"],
+                blk.hf, blk.hf, blk.stride, itemsize=2)
+            assert b16 < b32, a["name"]

@@ -87,6 +87,44 @@ def test_separable_fused_removes_intermediate_term():
     assert unf.flops == fus.flops  # fusion moves bytes, not work
 
 
+def test_fused_slab_bytes_below_unfused_at_hires():
+    """Row-slab invariant (the point of the slab grid): at resolutions
+    above the old ~1.5M-pixel ceiling the fused-with-slabs HBM bytes stay
+    STRICTLY below the unfused composition — the halo re-read is far
+    smaller than the intermediate round-trip it buys out."""
+    from repro.kernels import blocking
+
+    for h, c, co, stride in ((1504, 32, 32, 1), (1504, 32, 64, 2),
+                             (2048, 16, 32, 1)):
+        ho = -(-h // stride)
+        hi = (ho - 1) * stride + 3
+        plan = blocking.plan_separable(ho, ho, c, co, stride=stride)
+        assert plan is not None and plan.n_slabs > 1
+        unf = it.separable_traffic_unfused(1, hi, hi, c, co, 3, 3, stride)
+        fus = it.separable_traffic_fused(
+            1, hi, hi, c, co, 3, 3, stride,
+            block_co=plan.block_co, slab_h=plan.slab_h)
+        assert fus.bytes_hbm < unf.bytes_hbm, (h, c, co, stride)
+        assert fus.intensity > unf.intensity
+
+
+def test_slab_halo_bytes_counted_explicitly():
+    """Slabbing is not free: the slabbed fused model must exceed the
+    unslabbed one by at least the halo term, and the halo term must vanish
+    when unslabbed or when stride >= Hf (disjoint windows)."""
+    b, hi, c, co = 1, 1506, 32, 32
+    base = it.separable_traffic_fused(b, hi, hi, c, co, 3, 3, 1, block_co=co)
+    slab = it.separable_traffic_fused(b, hi, hi, c, co, 3, 3, 1,
+                                      block_co=co, slab_h=8)
+    n_slabs = -(-1504 // 8)
+    halo = it.separable_slab_halo_bytes(b, hi, c, 3, 1, n_slabs)
+    assert halo > 0
+    assert slab.bytes_hbm >= base.bytes_hbm + halo
+    assert slab.flops == base.flops       # slabbing moves bytes, not work
+    assert it.separable_slab_halo_bytes(b, hi, c, 3, 1, 1) == 0
+    assert it.separable_slab_halo_bytes(b, hi, c, 3, 3, n_slabs) == 0
+
+
 def test_rowpar_traffic_exceeds_channelpar():
     """The paper's core-inscalability claim, as traffic: row-parallel
     partitioning moves strictly more bytes and the gap grows with p."""

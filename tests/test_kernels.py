@@ -155,34 +155,22 @@ def test_rtra_oracle_equals_matmul():
 
 
 # ---------------------------------------------------------------------------
-# Edge geometry: block chooser fallbacks, sub-128 Co padding, SAME + stride 2
+# Edge geometry: block planner fallbacks, sub-128 Co padding, SAME + stride 2
 # ---------------------------------------------------------------------------
 
-from repro.kernels.dwconv2d import _block_c  # noqa: E402
+from repro.kernels import blocking  # noqa: E402
 
 
-def test_block_c_tiny_vmem_fallback():
-    """_block_c under a tiny budget must drop to the power-of-two lane
-    fallback (< 128), never 0, and the kernel must stay correct there."""
-    # 12 MiB default: full C fits
-    assert _block_c(14, 14, 12, 12, 512) == 512
-    # shrink budget until only a few channels fit: power-of-two fallback
-    cb = _block_c(14, 14, 12, 12, 512, vmem_budget=16 * 1024)
-    assert 1 <= cb < 128 and (cb & (cb - 1)) == 0
-    # budget floor: never returns 0
-    assert _block_c(64, 64, 62, 62, 512, vmem_budget=1) == 1
-    # run the kernel at a forced tiny block (the fallback execution path)
+def test_dwconv2d_tiny_block_execution_path():
+    """The planner's power-of-two lane fallback (tests/test_blocking.py)
+    must correspond to a correct kernel execution path at forced tiny
+    blocks."""
+    assert blocking.plan_dwconv2d(14, 14, 12, 12, 512).block_c == 512
     x = _arr((1, 9, 9, 12))
     f = _arr((3, 3, 12))
     got = dwconv2d_pallas(x, f, stride=1, block_c=2, interpret=True)
     want = ref.dwconv2d_ref(x, f, stride=1, padding="valid")
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
-
-
-def test_block_c_128_multiple_snapping():
-    """Mid-size budgets snap to a multiple of 128 lanes."""
-    cb = _block_c(28, 28, 26, 26, 1024, vmem_budget=2 * 1024 * 1024)
-    assert cb % 128 == 0 and 128 <= cb < 1024
 
 
 @pytest.mark.parametrize("co", [1, 7, 33, 127])

@@ -13,11 +13,8 @@ from repro.core.separable import (
     inverted_residual,
     separable_block,
 )
-from repro.kernels import ops, ref
-from repro.kernels.separable_fused import (
-    _block_sizes,
-    separable_fused_pallas,
-)
+from repro.kernels import blocking, ops, ref
+from repro.kernels.separable_fused import separable_fused_pallas
 
 RNG = np.random.default_rng(7)
 
@@ -134,10 +131,8 @@ def test_inverted_residual_policy_routing(stride, c_in, c_out):
 
 
 def test_fused_vmem_fallback_path():
-    """When no fused block shape fits the VMEM budget the op must fall back
-    to the unfused Pallas composition and stay correct."""
-    assert _block_sizes(114, 114, 112, 112, 3000, 3000,
-                        vmem_budget=64 * 1024) is None
+    """When even the minimal block plan exceeds the VMEM budget the op must
+    fall back to the unfused Pallas composition and stay correct."""
     x = _arr((1, 9, 9, 10))
     f = _arr((3, 3, 10), scale=1 / 3)
     w = _arr((10, 12), scale=0.3)
@@ -145,12 +140,12 @@ def test_fused_vmem_fallback_path():
     want = ref.separable_fused_ref(
         x, f, w, db, stride=1, padding="same",
         dw_activation="relu6", activation=None)
-    # budget too small for any fused blocking -> unfused composition path
-    assert _block_sizes(11, 11, 9, 9, 10, 12, vmem_budget=1024) is None
+    # budget below even (cb=1, cob=1, slab_h=1) -> unfused composition path
+    assert blocking.plan_separable(9, 9, 10, 12, vmem_budget=64) is None
     got_fb = ops.separable_fused(
         x, f, w, db, stride=1, padding="same",
         dw_activation="relu6", activation=None,
-        impl="pallas", interpret=True, vmem_budget=1024)
+        impl="pallas", interpret=True, vmem_budget=64)
     np.testing.assert_allclose(np.asarray(got_fb), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
     # handpicked tiny blocking still fused: multi-panel Co + multi-step C
@@ -164,10 +159,95 @@ def test_fused_vmem_fallback_path():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_block_sizes_prefers_single_co_panel():
-    """The chooser targets n_co == 1 (the traffic-optimal case) whenever the
-    accumulator fits; that is what makes fused bytes strictly lower."""
-    picked = _block_sizes(114, 114, 112, 112, 32, 64)
-    assert picked is not None and picked[1] == 64
-    picked = _block_sizes(9, 9, 7, 7, 1024, 1024)
-    assert picked is not None and picked[1] == 1024
+def test_fused_slab_path_via_tiny_budget():
+    """A budget that was infeasible pre-slabs now routes through the FUSED
+    kernel with a row-slab plan (not the unfused fallback) and stays
+    correct on the SAME-padded op path."""
+    plan = blocking.plan_separable(12, 12, 10, 12, vmem_budget=8 * 1024)
+    assert plan is not None and plan.n_slabs > 1
+    x = _arr((1, 12, 12, 10))
+    f = _arr((3, 3, 10), scale=1 / 3)
+    w = _arr((10, 12), scale=0.3)
+    db = _arr((10,), scale=0.1)
+    got = ops.separable_fused(
+        x, f, w, db, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True, vmem_budget=8 * 1024)
+    want = ref.separable_fused_ref(
+        x, f, w, db, stride=1, padding="same",
+        dw_activation="relu6", activation=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# (Hi, Wi, stride, slab_h) — halo edge cases: stride-2 (1-row halo), odd Ho,
+# slab_h not dividing Ho (garbage-row crop), slab_h == 1 (maximal halo).
+SLAB_CASES = [
+    (12, 12, 1, 4),      # slab divides Ho exactly
+    (13, 13, 1, 4),      # Ho = 11, remainder slab of 3
+    (13, 11, 2, 3),      # stride 2, Ho = 6, halo = 1 row
+    (14, 9, 2, 5),       # stride 2, odd Wo, remainder slab
+    (10, 10, 1, 1),      # slab_h = 1: every interior row re-fetched
+]
+
+
+@pytest.mark.parametrize("hi,wi,stride,slab_h", SLAB_CASES)
+def test_fused_slab_halo_edge_cases(hi, wi, stride, slab_h):
+    """Forced row-slab blocking vs the oracle at awkward geometries."""
+    c, co = 13, 17
+    x = _arr((1, hi, wi, c))
+    f = _arr((3, 3, c), scale=1 / 3)
+    w = _arr((c, co), scale=c ** -0.5)
+    db = _arr((c,), scale=0.1)
+    pb = _arr((co,), scale=0.1)
+    got = separable_fused_pallas(
+        x, f, w, db, pb, stride=stride,
+        dw_activation="relu6", activation="relu6",
+        block_c=8, block_co=16, slab_h=slab_h, interpret=True)
+    want = ref.separable_fused_ref(
+        x, f, w, db, pb, stride=stride, padding="valid",
+        dw_activation="relu6", activation="relu6")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_slab_residual_add():
+    """Residual add with a slab grid whose last slab is a remainder: the
+    residual BlockSpec is slabbed too and padded rows are cropped."""
+    x = _arr((2, 11, 11, 24))
+    f = _arr((3, 3, 24), scale=1 / 3)
+    w = _arr((24, 24), scale=24 ** -0.5)
+    res = _arr((2, 9, 9, 24))
+    got = separable_fused_pallas(
+        x, f, w, None, None, res, stride=1,
+        dw_activation="relu6", activation=None,
+        block_c=8, block_co=24, slab_h=4, interpret=True)
+    want = ref.separable_fused_ref(
+        x, f, w, None, None, res, stride=1, padding="valid",
+        dw_activation="relu6", activation=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_fused_hires_above_old_ceiling(dtype):
+    """Acceptance gate: a 1x1504x1504x32 separable block — Ho*Wo ~ 2.26M,
+    far above the old ~1.5M-pixel accumulator ceiling that forced the
+    unfused fallback — must route through the fused Pallas kernel on a real
+    row-slab plan and match the reference oracle."""
+    plan = blocking.plan_separable(1504, 1504, 32, 32, dtype=dtype)
+    assert plan is not None and plan.n_slabs > 1      # real plan, slabbed
+    x = _arr((1, 1504, 1504, 32)).astype(dtype)
+    f = _arr((3, 3, 32), scale=1 / 3).astype(dtype)
+    w = _arr((32, 32), scale=32 ** -0.5).astype(dtype)
+    got = ops.separable_fused(
+        x, f, w, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True)
+    want = ref.separable_fused_ref(
+        x, f, w, stride=1, padding="same",
+        dw_activation="relu6", activation=None)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
