@@ -112,8 +112,53 @@ def separable_fused_rows(blocks, dtype=jnp.float32) -> list[dict]:
     return rows
 
 
+def fused3_rows(blocks, dtype=jnp.float32) -> list[dict]:
+    """VMEM claim of the 3-stage fused kernel (expand-on-the-fly) at the
+    planner's blocks, per whole MobileNetV2 inverted residual: the 2-stage
+    working set plus the raw-input window, the expand-weight tile and the
+    fp32 expanded value (kernels/blocking.fused3_vmem_bytes).
+
+    The block shapes come from the SAME planner path the op runs
+    (core/chain.plan over an inverted_residual_spec — residual rule and
+    all), so this table cannot drift from what actually lowers."""
+    from repro.core import chain
+
+    nb = blocking.dtype_bytes(dtype)
+    rows = []
+    for blk in blocks:
+        ho = -(-blk.h // blk.stride)
+        hi = (ho - 1) * blk.stride + blk.hf
+        spec = chain.inverted_residual_spec(
+            blk.c_in, blk.c_out, expand=blk.expand, stride=blk.stride,
+            hf=blk.hf)
+        cp = chain.plan(spec, (1, blk.h, blk.h, blk.c_in), dtype=dtype)
+        if [s.kind for s in cp.segments] != ["fused3"]:
+            rows.append({"name": blk.name, "fusible": False})
+            continue
+        plan = cp.segments[0].plan
+        t = it.separable_traffic_fused3(
+            1, hi, hi, blk.c_in, blk.c_mid, blk.c_out, blk.hf, blk.hf,
+            blk.stride, block_co=plan.block_co, slab_h=plan.slab_h,
+            dtype_bytes=nb)
+        tc, tm = t.time_s(PEAK, HBM)
+        rows.append({
+            "name": blk.name,
+            "fusible": True,
+            "block_c": plan.block_c,
+            "block_co": plan.block_co,
+            "slab_h": plan.slab_h,
+            "n_slabs": plan.n_slabs,
+            "vmem_bytes": plan.vmem_bytes,
+            "vmem_ok": plan.vmem_bytes <= VMEM,
+            "ai_flops_per_byte": t.intensity,
+            "bound": "HBM" if tm > tc else "MXU",
+            "roofline_us": max(tc, tm) * 1e6,
+        })
+    return rows
+
+
 def csv_rows() -> list[str]:
-    from benchmarks.layers import SEP_SUITES, SUITES
+    from benchmarks.layers import MOBILENET_V2_IR, SEP_SUITES, SUITES
     out = []
     dws, pws = SUITES["mobilenet_v1"]
     for r in dwconv2d_rows(dws):
@@ -142,4 +187,18 @@ def csv_rows() -> list[str]:
                     f"xs{r['slab_h']};n_slabs={r['n_slabs']};"
                     f"vmem_KiB={r['vmem_bytes']//1024};fits={r['vmem_ok']};"
                     f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
+    for dt, tag in ((jnp.float32, "sepfused3"), (jnp.bfloat16,
+                                                 "sepfused3_bf16")):
+        for r in fused3_rows(MOBILENET_V2_IR, dtype=dt):
+            if not r["fusible"]:
+                out.append(f"vmem/{tag}/mobilenet_v2/{r['name']},0.0,"
+                           "fusible=False")
+                continue
+            out.append(
+                f"vmem/{tag}/mobilenet_v2/{r['name']},"
+                f"{r['roofline_us']:.1f},"
+                f"blocks=c{r['block_c']}xco{r['block_co']}"
+                f"xs{r['slab_h']};n_slabs={r['n_slabs']};"
+                f"vmem_KiB={r['vmem_bytes']//1024};fits={r['vmem_ok']};"
+                f"AI={r['ai_flops_per_byte']:.2f};bound={r['bound']}")
     return out

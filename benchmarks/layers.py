@@ -176,3 +176,35 @@ SEP_SUITES = {
     "mobilenet_v2": MOBILENET_V2_SEP,
     "hires": HIRES_SEP,
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class IRBlock:
+    """A WHOLE MobileNetV2 inverted residual (PW-expand -> DW -> PW-project
+    [+ residual]): the unit the declarative chain API plans and the 3-stage
+    fused kernel executes in one pass (DESIGN.md §5)."""
+    name: str
+    h: int          # input spatial size at the block (square)
+    c_in: int       # raw input width (pre-expansion)
+    expand: int     # expansion factor (c_mid = c_in * expand)
+    c_out: int
+    stride: int
+    hf: int = 3
+
+    @property
+    def c_mid(self) -> int:
+        return self.c_in * self.expand
+
+
+# MobileNetV2 (arXiv:1801.04381, Table 2) bottleneck stages as whole blocks:
+# one representative block per stage (first block of the stage; strided
+# blocks carry no residual, the 14x14x64/96 stage-1 blocks do).
+MOBILENET_V2_IR = [
+    IRBlock("V2-IR1", 112, 16, 6, 24, 2),
+    IRBlock("V2-IR2", 56, 24, 6, 32, 2),
+    IRBlock("V2-IR3", 28, 32, 6, 64, 2),
+    IRBlock("V2-IR4", 14, 64, 6, 96, 1),
+    IRBlock("V2-IR5", 14, 96, 6, 160, 2),
+    IRBlock("V2-IR6", 7, 160, 6, 320, 1),
+    IRBlock("V2-IR7", 14, 64, 6, 64, 1),   # residual case (c_in == c_out)
+]

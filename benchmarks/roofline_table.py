@@ -116,6 +116,87 @@ def separable_fusion_rows(dtype=None) -> list[dict]:
     return rows
 
 
+def chain_fusion_rows(dtype=None) -> list[dict]:
+    """Per-block ChainPlan traffic table for whole MobileNetV2 inverted
+    residuals: what the chain planner actually lowers (its ChainPlan and
+    the modeled HBM bytes) vs the PR-2 two-stage lowering (standalone
+    expansion GEMM + fused DW->PW) vs fully unfused.  The CI dry-run gate
+    asserts every block plans to a single fused3 pass with strictly
+    decreasing bytes across the three strategies (DESIGN.md §5)."""
+    try:
+        from benchmarks.layers import MOBILENET_V2_IR
+    except ModuleNotFoundError:  # run as `python benchmarks/roofline_table.py`
+        from layers import MOBILENET_V2_IR
+
+    import jax.numpy as jnp
+    from repro.core import chain
+    from repro.kernels import blocking
+
+    dtype = dtype or jnp.float32
+    nb = blocking.dtype_bytes(dtype)
+    rows = []
+    for blk in MOBILENET_V2_IR:
+        spec = chain.inverted_residual_spec(
+            blk.c_in, blk.c_out, expand=blk.expand, stride=blk.stride,
+            hf=blk.hf)
+        shape = (1, blk.h, blk.h, blk.c_in)
+        cp = chain.plan(spec, shape, dtype=dtype)
+        t_chain = chain.chain_traffic(spec, cp, shape)
+        ho = -(-blk.h // blk.stride)
+        p2 = blocking.plan_separable(ho, ho, blk.c_mid, blk.c_out,
+                                     stride=blk.stride, hf=blk.hf,
+                                     wf=blk.hf, dtype=dtype,
+                                     residual=cp.residual)
+        t_2stage = it.separable_traffic_2stage(
+            1, blk.h, blk.h, blk.c_in, blk.c_mid, blk.c_out, blk.hf,
+            blk.hf, blk.stride, block_co=p2.block_co if p2 else None,
+            slab_h=p2.slab_h if p2 else None, dtype_bytes=nb)
+        t_unf = it.separable_traffic_unfused3(
+            1, blk.h, blk.h, blk.c_in, blk.c_mid, blk.c_out, blk.hf,
+            blk.hf, blk.stride, dtype_bytes=nb)
+        mb_2stage = t_2stage.bytes_hbm
+        mb_unf = t_unf.bytes_hbm
+        if cp.residual:
+            # keep the comparison symmetric with chain_traffic's residual
+            # terms: the 2-stage lowering folds the residual into its fused
+            # tail (one streamed read); the unfused one pays a separate
+            # elementwise add (read y, read res, write sum)
+            mb_2stage += nb * blk.h * blk.h * blk.c_out
+            mb_unf += nb * 3 * blk.h * blk.h * blk.c_out
+        seg = cp.segments[0]
+        rows.append({
+            "name": blk.name,
+            "plan": "+".join(s.kind for s in cp.segments),
+            "single_pass": cp.fully_fused,
+            "residual": cp.residual,
+            "blocks": (f"c{seg.plan.block_c}xco{seg.plan.block_co}"
+                       f"xs{seg.plan.slab_h}"),
+            "mb_3stage": t_chain.bytes_hbm / 1e6,
+            "mb_2stage": mb_2stage / 1e6,
+            "mb_unfused": mb_unf / 1e6,
+            "saved_vs_2stage_mb": (mb_2stage - t_chain.bytes_hbm) / 1e6,
+            "ai_3stage": t_chain.intensity,
+            "ai_2stage": t_2stage.flops / max(mb_2stage, 1.0),
+        })
+    return rows
+
+
+def chain_fusion_markdown() -> str:
+    lines = [
+        "| block | plan | single pass | blocks | 3-stage HBM (MB) | "
+        "2-stage HBM (MB) | unfused HBM (MB) | saved vs 2-stage (MB) | "
+        "AI 3-stage | AI 2-stage |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in chain_fusion_rows():
+        lines.append(
+            f"| {r['name']} | {r['plan']} | {r['single_pass']} | "
+            f"{r['blocks']} | {r['mb_3stage']:.2f} | {r['mb_2stage']:.2f} | "
+            f"{r['mb_unfused']:.2f} | {r['saved_vs_2stage_mb']:.2f} | "
+            f"{r['ai_3stage']:.2f} | {r['ai_2stage']:.2f} |")
+    return "\n".join(lines)
+
+
 def separable_fusion_markdown() -> str:
     lines = [
         "| block | fused blocks | slabs | unfused HBM (MB) | fused HBM (MB) |"
@@ -153,3 +234,5 @@ if __name__ == "__main__":
     print(markdown_table(recs, "multi"))
     print()
     print(separable_fusion_markdown())
+    print()
+    print(chain_fusion_markdown())

@@ -73,6 +73,20 @@ def main() -> None:
                 f"MB_fused={r['bytes_fused']/1e6:.2f};"
                 f"MB_saved={r['bytes_saved']/1e6:.2f};"
                 f"modeled_tpu_speedup={r['modeled_speedup']:.2f}x")
+    # per-block ChainPlan traffic table: what the declarative chain planner
+    # lowers a WHOLE V2 inverted residual to (3-stage fused), vs the PR-2
+    # 2-stage lowering, vs fully unfused (DESIGN.md §5)
+    from benchmarks.roofline_table import chain_fusion_rows
+    for r in chain_fusion_rows():
+        rows.append(
+            f"chain/mobilenet_v2/{r['name']},0.0,"
+            f"plan={r['plan']};single_pass={r['single_pass']};"
+            f"residual={r['residual']};blocks={r['blocks']};"
+            f"MB_3stage={r['mb_3stage']:.2f};"
+            f"MB_2stage={r['mb_2stage']:.2f};"
+            f"MB_unfused={r['mb_unfused']:.2f};"
+            f"MB_saved_vs_2stage={r['saved_vs_2stage_mb']:.2f}")
+
     a = results["fig1_anchor"]
     rows.append(f"fig1/{a['name']},{a['us_xla_cpu']:.1f},"
                 f"naive_loops_us={a['us_naive_loops']:.0f};"

@@ -1,14 +1,22 @@
-"""The paper's own workload: MobileNetV1 inference built entirely from the
-paper's two ops (core.depthwise2d + core.pointwise), with the per-layer
-arithmetic-intensity report that drives the paper's analysis.
+"""The paper's own workload: MobileNet inference built entirely from the
+paper's two ops, driven by the declarative chain API (spec -> plan ->
+lower -> execute, DESIGN.md §5) — with the per-layer arithmetic-intensity
+report that drives the paper's analysis.
 
-  PYTHONPATH=src python examples/mobilenet_inference.py [--pallas] [--fused]
+  PYTHONPATH=src python examples/mobilenet_inference.py \
+      [--pallas] [--fused] [--res N]
 
 --pallas runs the Pallas kernels in interpret mode (slow, CPU) instead of
 the XLA path, and cross-checks outputs.
---fused routes every separable block through the single-pass fused DW+PW
-kernel (KernelPolicy.fused, DESIGN.md §3), cross-checks it against the
-unfused composition, and reports the modeled HBM bytes the fusion removes.
+--fused lets the chain planner fuse every block (the default policy): each
+V1 separable block plans to one DW->PW kernel pass, and each V2 inverted
+residual to ONE 3-stage pass (PW-expand computed on the fly -> DW ->
+PW-project, residual folded into the store) — neither intermediate touches
+HBM.  The demo prints each block's ChainPlan, cross-checks fused against
+the unfused composition (KernelPolicy(fused=False), the legacy opt-out),
+and reports the modeled HBM bytes the planner's fusion removes.
+--res N runs at an NxN input instead of 112x112 (CI smoke-tests the fused
+interpret path at --res 16).
 """
 import os
 import sys
@@ -21,9 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import KernelPolicy
+from repro.core import KernelPolicy, chain
 from repro.core.separable import init_separable, separable_block
-from repro.core.pwconv import pointwise
 from repro.core import intensity as it
 
 # MobileNetV1 body: (c_in, c_out, stride) per separable block (Table 1)
@@ -49,14 +56,54 @@ def forward(params, x, policy):
     return x
 
 
+def v2_single_pass_demo(policy, res):
+    """A whole MobileNetV2 inverted residual through the chain API: spec ->
+    plan (one fused3 pass) -> execute, checked against the unfused plan."""
+    spec = chain.inverted_residual_spec(32, 32, expand=6, stride=1)
+    shape = (1, res, res, 32)
+    cp = chain.plan(spec, shape, policy=policy)
+    t = chain.chain_traffic(spec, cp, shape)
+    cp_unf = chain.plan(spec, shape, policy=KernelPolicy(
+        impl=policy.impl, interpret=policy.interpret, fused=False))
+    t_unf = chain.chain_traffic(spec, cp_unf, shape)
+    print(f"V2 inverted residual {res}x{res}x32 (expand 6): plan = "
+          f"{'+'.join(s.kind for s in cp.segments)}, "
+          f"kernel passes = {cp.n_kernel_passes} "
+          f"(residual {'folded' if cp.residual_fused else 'separate'})")
+    print(f"  modeled HBM: fused chain {t.bytes_hbm/1e6:.2f} MB vs "
+          f"unfused {t_unf.bytes_hbm/1e6:.2f} MB "
+          f"(neither the expanded tensor nor the DW output leaves VMEM)")
+    params = chain.init_chain(jax.random.PRNGKey(7), spec, 32)
+    x = jax.random.normal(jax.random.PRNGKey(8), shape)
+    y = chain.execute(spec, params, x, policy=policy, chain_plan=cp)
+    y_unf = chain.execute(spec, params, x, policy=KernelPolicy(
+        impl=policy.impl, interpret=policy.interpret, fused=False))
+    err = float(jnp.abs(y - y_unf).max())
+    print(f"  single-pass vs unfused-composition maxerr: {err:.2e}")
+    assert err < 1e-3, "fused V2 chain diverged from the unfused oracle"
+
+
 def main():
-    use_pallas = "--pallas" in sys.argv
-    use_fused = "--fused" in sys.argv
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pallas", action="store_true",
+                    help="run the Pallas kernels in interpret mode (slow, "
+                         "CPU) and cross-check against the XLA path")
+    ap.add_argument("--fused", action="store_true",
+                    help="let the chain planner fuse every block (V1: one "
+                         "DW->PW pass; V2: ONE 3-stage expand->DW->project "
+                         "pass, DESIGN.md §5) and cross-check against the "
+                         "unfused composition")
+    ap.add_argument("--res", type=int, default=112, metavar="N",
+                    help="input resolution NxN (CI smokes --res 16)")
+    args = ap.parse_args()
+    use_pallas, use_fused, res = args.pallas, args.fused, args.res
     key = jax.random.PRNGKey(0)
     params = build(key)
-    x = jax.random.normal(jax.random.PRNGKey(1), (1, 112, 112, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, res, res, 32))
 
-    xla = KernelPolicy(impl="xla")
+    # fused=False pins the legacy unfused composition as the baseline
+    xla = KernelPolicy(impl="xla", fused=False)
     fn = jax.jit(lambda p, x: forward(p, x, xla))
     out = fn(params, x)
     jax.block_until_ready(out)
@@ -64,18 +111,19 @@ def main():
     out = fn(params, x)
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
-    print(f"MobileNetV1 body fwd (XLA CPU): {dt*1e3:.1f} ms, "
+    print(f"MobileNetV1 body fwd (XLA CPU, unfused): {dt*1e3:.1f} ms, "
           f"features {out.shape}")
 
     if use_pallas:
-        pal = KernelPolicy(impl="pallas", interpret=True)
+        pal = KernelPolicy(impl="pallas", interpret=True, fused=False)
         out_p = forward(params, x, pal)
         err = float(jnp.abs(out - out_p).max())
         print(f"Pallas(interpret) vs XLA maxerr: {err:.2e}")
 
     if use_fused:
+        # default policy: the chain planner fuses whatever fits its budget
         fused = KernelPolicy(impl="pallas" if use_pallas else "xla",
-                             interpret=use_pallas, fused=True)
+                             interpret=use_pallas)
         fn_f = jax.jit(lambda p, x: forward(p, x, fused))
         out_f = fn_f(params, x)
         jax.block_until_ready(out_f)
@@ -84,9 +132,9 @@ def main():
         jax.block_until_ready(out_f)
         dtf = time.perf_counter() - t0
         err = float(jnp.abs(out - out_f).max())
-        print(f"fused separable blocks ({fused.impl}): {dtf*1e3:.1f} ms, "
-              f"maxerr vs unfused: {err:.2e}")
-        h2 = 112
+        print(f"planner-fused separable blocks ({fused.impl}): "
+              f"{dtf*1e3:.1f} ms, maxerr vs unfused: {err:.2e}")
+        h2 = res
         saved = 0.0
         for ci, co, s in V1_BLOCKS:
             ho = -(-h2 // s)
@@ -97,11 +145,12 @@ def main():
         print(f"modeled HBM bytes removed by fusion (whole body): "
               f"{saved/1e6:.1f} MB (the DW intermediate round-trips, "
               f"DESIGN.md §3)")
+        v2_single_pass_demo(fused, min(res, 28))
 
     print("\nper-layer AI report (paper's analysis, DESIGN.md §2):")
     print(f"{'block':8s} {'HxW':>9s} {'C':>5s} {'DW AI ours':>11s} "
           f"{'DW AI tflite':>13s} {'PW AI rtrd':>11s} {'PW AI rtra':>11s}")
-    h = 112
+    h = res
     for i, (ci, co, s) in enumerate(V1_BLOCKS):
         ho = h // s
         print(f"B{i:<7d} {h:>4d}x{ho:<4d} {ci:>5d} "

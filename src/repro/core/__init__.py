@@ -1,4 +1,16 @@
-"""Core: the paper's DWConv/PWConv contributions as composable framework ops."""
+"""Core: the paper's DWConv/PWConv contributions as composable framework ops,
+plus the declarative separable-chain API (spec -> plan -> lower -> execute)."""
+from repro.core.chain import (
+    DW,
+    PW,
+    SeparableSpec,
+    execute,
+    init_chain,
+    inverted_residual_spec,
+    lower,
+    plan,
+    separable_block_spec,
+)
 from repro.core.dwconv import (
     depthwise1d_causal,
     depthwise1d_step,
@@ -15,14 +27,23 @@ from repro.core.separable import (
 
 __all__ = [
     "DEFAULT_POLICY",
+    "DW",
     "KernelPolicy",
+    "PW",
+    "SeparableSpec",
     "depthwise1d_causal",
     "depthwise1d_step",
     "depthwise2d",
+    "execute",
+    "init_chain",
     "init_conv_state",
     "init_inverted_residual",
     "init_separable",
     "inverted_residual",
+    "inverted_residual_spec",
+    "lower",
+    "plan",
     "pointwise",
     "separable_block",
+    "separable_block_spec",
 ]

@@ -1,0 +1,359 @@
+"""Declarative separable-chain API: spec -> plan -> lower -> execute.
+
+The paper's whole argument is about orchestrating data movement across the
+DW/PW pair; this module makes the *block* — not the op — the schedulable
+unit (DESIGN.md §5).  A `SeparableSpec` declares an ordered chain of stages
+(`PW` expand, `DW`, `PW` project, optional residual); `plan()` budgets the
+whole chain against the policy's VMEM budget and answers with a
+`ChainPlan` naming which contiguous stages fuse (and at which block
+shapes); `kernels/lowering.lower()` maps that onto kernel passes;
+`execute()` runs it.  Fusion is a planner decision, not a user boolean:
+the planner fuses the longest run that fits and degrades
+3-fused -> 2-fused -> unfused on its own.
+
+The capability this unlocks (ROADMAP): a MobileNetV2 inverted residual
+lowers to ONE kernel pass — the expansion GEMM is computed on the fly per
+row slab inside the fused kernel, so neither the expanded tensor (6x the
+input at the usual expansion factor) nor the DW output ever touches HBM.
+
+    spec = inverted_residual_spec(c_in=32, c_out=32, expand=6)
+    params = init_chain(key, spec, c_in=32)
+    cp = plan(spec, x.shape)           # ChainPlan: [fused3] at MobileNet shapes
+    y = execute(spec, params, x)       # or lower(spec, cp)(params, x)
+
+`separable_block` / `inverted_residual` in ``core/separable.py`` are thin
+shims over this API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intensity as it
+from repro.kernels import blocking, lowering
+from repro.kernels.blocking import ChainPlan, ChainSegment
+from repro.kernels.epilogue import ACTIVATIONS
+from repro.kernels.policy import DEFAULT_POLICY, KernelPolicy
+
+
+# ---------------------------------------------------------------------------
+# Spec: the declarative description of a separable block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PW:
+    """Pointwise stage: 1x1 conv / GEMM to ``features`` output channels.
+
+    ``bias=False`` on an *expansion* PW is what makes it eligible for
+    3-stage fusion (a biased expansion cannot commute with the zero SAME
+    padding the fused kernel applies to the raw input —
+    kernels/separable_fused.py).
+    """
+    features: int
+    activation: Optional[str] = None
+    bias: bool = False
+
+    def __post_init__(self):
+        assert self.activation is None or self.activation in ACTIVATIONS
+
+
+@dataclasses.dataclass(frozen=True)
+class DW:
+    """Depthwise stage: ``hf x wf`` spatial conv at the incoming width."""
+    stride: int = 1
+    activation: Optional[str] = "relu6"
+    hf: int = 3
+    wf: int = 3
+    padding: str = "same"
+    bias: bool = False
+
+    def __post_init__(self):
+        assert self.activation is None or self.activation in ACTIVATIONS
+        assert self.padding.lower() in ("same", "valid"), self.padding
+
+    def out_dims(self, h: int, w: int) -> Tuple[int, int]:
+        if self.padding.lower() == "same":
+            return -(-h // self.stride), -(-w // self.stride)
+        return ((h - self.hf) // self.stride + 1,
+                (w - self.wf) // self.stride + 1)
+
+
+Stage = Union[PW, DW]
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparableSpec:
+    """An ordered chain of PW/DW stages + residual declaration.
+
+    ``residual``: ``False`` (none), ``True`` (always add the chain input to
+    the chain output), or ``"auto"`` (add it exactly when shapes allow —
+    total stride 1 and c_out == c_in; the MobileNetV2 rule).
+    """
+    stages: Tuple[Stage, ...]
+    residual: Union[bool, str] = False
+
+    def __post_init__(self):
+        assert self.stages, "empty chain"
+        assert self.residual in (True, False, "auto"), self.residual
+        assert all(isinstance(s, (PW, DW)) for s in self.stages)
+
+    def out_channels(self, c_in: int) -> int:
+        c = c_in
+        for s in self.stages:
+            if isinstance(s, PW):
+                c = s.features
+        return c
+
+    def stride_product(self) -> int:
+        p = 1
+        for s in self.stages:
+            if isinstance(s, DW):
+                p *= s.stride
+        return p
+
+    def residual_active(self, c_in: int) -> bool:
+        if self.residual == "auto":
+            return (self.stride_product() == 1
+                    and self.out_channels(c_in) == c_in)
+        return bool(self.residual)
+
+
+def separable_block_spec(c_out: int, *, stride: int = 1,
+                         activation: str = "relu6",
+                         hf: int = 3) -> SeparableSpec:
+    """MobileNetV1 separable block: DW(+bias) -> PW(+bias), both activated."""
+    return SeparableSpec(stages=(
+        DW(stride=stride, activation=activation, hf=hf, wf=hf, bias=True),
+        PW(c_out, activation=activation, bias=True),
+    ))
+
+
+def inverted_residual_spec(c_in: int, c_out: int, *, expand: int = 6,
+                           stride: int = 1, hf: int = 3) -> SeparableSpec:
+    """MobileNetV2 inverted residual: bias-free PW-expand (relu6) -> DW
+    (relu6) -> linear PW-project, residual when shapes allow."""
+    return SeparableSpec(stages=(
+        PW(c_in * expand, activation="relu6"),
+        DW(stride=stride, activation="relu6", hf=hf, wf=hf),
+        PW(c_out),
+    ), residual="auto")
+
+
+def init_chain(key, spec: SeparableSpec, c_in: int,
+               dtype=jnp.float32) -> list:
+    """He-style init for a chain; one params dict per stage, aligned with
+    ``spec.stages`` (see kernels/lowering.PARAM_KEYS)."""
+    params = []
+    c = c_in
+    keys = jax.random.split(key, len(spec.stages))
+    for k, s in zip(keys, spec.stages):
+        if isinstance(s, PW):
+            p = {"w": (jax.random.normal(k, (c, s.features), dtype)
+                       / jnp.sqrt(c).astype(dtype))}
+            if s.bias:
+                p["b"] = jnp.zeros((s.features,), dtype)
+            c = s.features
+        else:
+            p = {"f": (jax.random.normal(k, (s.hf, s.wf, c), dtype)
+                       / jnp.sqrt(s.hf * s.wf).astype(dtype))}
+            if s.bias:
+                p["b"] = jnp.zeros((c,), dtype)
+        params.append(p)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# plan: budget the whole chain, decide what fuses (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def _fusable3(stages: Tuple[Stage, ...], i: int) -> bool:
+    """stages[i:i+3] is a (bias-free PW-expand, DW, PW) run."""
+    return (i + 2 < len(stages)
+            and isinstance(stages[i], PW) and not stages[i].bias
+            and isinstance(stages[i + 1], DW)
+            and isinstance(stages[i + 2], PW))
+
+
+def _fusable2(stages: Tuple[Stage, ...], i: int) -> bool:
+    """stages[i:i+2] is a (DW, PW) run."""
+    return (i + 1 < len(stages)
+            and isinstance(stages[i], DW)
+            and isinstance(stages[i + 1], PW))
+
+
+def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
+         dtype=jnp.float32,
+         policy: KernelPolicy = DEFAULT_POLICY) -> ChainPlan:
+    """Budget the whole chain at ``x_shape`` and decide which contiguous
+    stages fuse.
+
+    Greedy longest-run-first with per-run VMEM feasibility, degrading
+    3-fused -> 2-fused -> unfused: at each position try the 3-stage window
+    (bias-free PW-expand -> DW -> PW, ``plan_separable3``), then the
+    2-stage window (DW -> PW, ``plan_separable``), else lower a standalone
+    stage and move on.  The residual is folded into the final segment's
+    kernel when that segment is fused (the kernels' residual operand);
+    otherwise it lowers to a separate add.  Deterministic, shape-only
+    arithmetic — the returned ChainPlan is a cacheable, comparable unit.
+    """
+    b, h, w, c = x_shape
+    stages = spec.stages
+    n = len(stages)
+    # The residual also needs the spatial dims preserved (a valid-padded DW
+    # shrinks them even at stride 1, which the channel/stride rule alone
+    # would miss).
+    ho_f, wo_f = h, w
+    for s in stages:
+        if isinstance(s, DW):
+            ho_f, wo_f = s.out_dims(ho_f, wo_f)
+    spatial_ok = (ho_f, wo_f) == (h, w)
+    if spec.residual is True and not spatial_ok:
+        raise ValueError(
+            f"residual=True but the chain maps {h}x{w} -> {ho_f}x{wo_f}")
+    res_active = spec.residual_active(c) and spatial_ok
+    allowed = policy.fusion_allowed
+    budget = policy.vmem_budget
+    nb = blocking.dtype_bytes(dtype)
+
+    segments: list = []
+    i = 0
+    while i < n:
+        s = stages[i]
+        if allowed and _fusable3(stages, i):
+            d, proj = stages[i + 1], stages[i + 2]
+            ho, wo = d.out_dims(h, w)
+            with_res = res_active and i + 3 == n
+            p3 = blocking.plan_separable3(
+                ho, wo, c, stages[i].features, proj.features,
+                stride=d.stride, hf=d.hf, wf=d.wf, dtype=dtype,
+                vmem_budget=budget, residual=with_res)
+            if p3 is not None:
+                segments.append(ChainSegment("fused3", (i, i + 1, i + 2), p3))
+                h, w, c = ho, wo, proj.features
+                i += 3
+                continue
+        if allowed and _fusable2(stages, i):
+            d, proj = stages[i], stages[i + 1]
+            ho, wo = d.out_dims(h, w)
+            with_res = res_active and i + 2 == n
+            p2 = blocking.plan_separable(
+                ho, wo, c, proj.features, stride=d.stride, hf=d.hf,
+                wf=d.wf, dtype=dtype, vmem_budget=budget,
+                residual=with_res)
+            if p2 is not None:
+                segments.append(ChainSegment("fused2", (i, i + 1), p2))
+                h, w, c = ho, wo, proj.features
+                i += 2
+                continue
+        if isinstance(s, PW):
+            pp = blocking.plan_pwconv(b * h * w, c, s.features, dtype=dtype,
+                                      vmem_budget=budget)
+            segments.append(ChainSegment("pw", (i,), pp))
+            c = s.features
+        else:
+            ho, wo = s.out_dims(h, w)
+            hi_v = (ho - 1) * s.stride + s.hf
+            wi_v = (wo - 1) * s.stride + s.wf
+            dp = blocking.plan_dwconv2d(hi_v, wi_v, ho, wo, c, s.hf, s.wf,
+                                        dtype=dtype, vmem_budget=budget)
+            segments.append(ChainSegment("dw", (i,), dp))
+            h, w = ho, wo
+        i += 1
+
+    residual_fused = bool(
+        res_active and segments
+        and segments[-1].kind in ("fused3", "fused2"))
+    return ChainPlan(
+        segments=tuple(segments),
+        residual=res_active,
+        residual_fused=residual_fused,
+        dtype_bytes=nb,
+        vmem_budget=budget,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lower / execute
+# ---------------------------------------------------------------------------
+
+#: Re-export: lowering lives at the kernel layer (kernels/lowering.py).
+lower = lowering.lower
+
+
+def execute(spec: SeparableSpec, params: Sequence[dict], x: jax.Array, *,
+            policy: KernelPolicy = DEFAULT_POLICY,
+            chain_plan: Optional[ChainPlan] = None) -> jax.Array:
+    """Run the chain: plan (unless given), lower, execute."""
+    if chain_plan is None:
+        chain_plan = plan(spec, x.shape, dtype=x.dtype, policy=policy)
+    return lower(spec, chain_plan, policy)(params, x)
+
+
+# ---------------------------------------------------------------------------
+# ChainPlan traffic model (core/intensity.py per-segment terms)
+# ---------------------------------------------------------------------------
+
+def chain_traffic(spec: SeparableSpec, chain_plan: ChainPlan,
+                  x_shape: Sequence[int], *,
+                  dtype_bytes: Optional[int] = None) -> "it.Traffic":
+    """Modeled HBM traffic + FLOPs of the planned chain: the sum of each
+    segment's kernel-level model (``core/intensity.py``), plus the separate
+    residual add when it is not folded into a fused pass.  This is the
+    table the benchmark gate prints per block (3-stage fused vs 2-stage
+    fused vs unfused)."""
+    nb = dtype_bytes or chain_plan.dtype_bytes
+    b, h, w, c = x_shape
+    stages = spec.stages
+    flops = 0.0
+    bytes_ = 0.0
+    for seg in chain_plan.segments:
+        if seg.kind == "fused3":
+            d, proj = stages[seg.stages[1]], stages[seg.stages[2]]
+            ho, wo = d.out_dims(h, w)
+            hi_v = (ho - 1) * d.stride + d.hf
+            wi_v = (wo - 1) * d.stride + d.wf
+            t = it.separable_traffic_fused3(
+                b, hi_v, wi_v, c, stages[seg.stages[0]].features,
+                proj.features, d.hf, d.wf, d.stride,
+                block_co=seg.plan.block_co, slab_h=seg.plan.slab_h,
+                dtype_bytes=nb)
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "fused2":
+            d, proj = stages[seg.stages[0]], stages[seg.stages[1]]
+            ho, wo = d.out_dims(h, w)
+            hi_v = (ho - 1) * d.stride + d.hf
+            wi_v = (wo - 1) * d.stride + d.wf
+            t = it.separable_traffic_fused(
+                b, hi_v, wi_v, c, proj.features, d.hf, d.wf, d.stride,
+                block_co=seg.plan.block_co, slab_h=seg.plan.slab_h,
+                dtype_bytes=nb)
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "pw":
+            st = stages[seg.stages[0]]
+            t = it.pwconv_traffic_rtrd(
+                b * h * w, c, st.features, seg.plan.block_g,
+                seg.plan.block_c, seg.plan.block_co, dtype_bytes=nb)
+            c = st.features
+        else:
+            st = stages[seg.stages[0]]
+            ho, wo = st.out_dims(h, w)
+            hi_v = (ho - 1) * st.stride + st.hf
+            wi_v = (wo - 1) * st.stride + st.wf
+            t = it.dwconv2d_traffic(b, hi_v, wi_v, c, st.hf, st.wf,
+                                    st.stride, dtype_bytes=nb)
+            h, w = ho, wo
+        flops += t.flops
+        bytes_ += t.bytes_hbm
+    if chain_plan.residual:
+        if chain_plan.residual_fused:
+            # the kernel streams the residual operand once; the accumulate
+            # and store are already inside the fused pass
+            bytes_ += nb * b * h * w * c
+        else:
+            # separate elementwise add: read both operands, write the sum
+            bytes_ += nb * 3 * b * h * w * c
+        flops += b * h * w * c
+    return it.Traffic(flops, bytes_)

@@ -213,6 +213,86 @@ def separable_traffic_fused(
     return Traffic(flops, bytes_)
 
 
+def separable_traffic_fused3(
+    b: int, hi: int, wi: int, ci: int, c: int, co: int,
+    hf: int, wf: int, stride: int,
+    block_co: int | None = None, slab_h: int | None = None,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """3-stage fused chain (PW-expand -> DW -> PW-project in ONE kernel
+    pass, kernels/separable_fused.py with ``expand_w``): the expansion GEMM
+    is computed on the fly per row slab, so neither the EXPANDED tensor
+    (``B*Hi*Wi*C`` — 6x the input at MobileNetV2's expansion factor) nor
+    the DW output ever exists in HBM.
+
+    ``ci`` is the raw-input width, ``c`` the expanded (DW) width, ``co``
+    the projected width.  Streams: RAW input once per Co panel (at ``ci``
+    channels — cheaper than the 2-stage kernel's expanded-width stream),
+    expand weight + DW filter per grid cell, project weight per
+    (batch, slab), output once.  The expand GEMM and DW compute are
+    replayed per Co panel (recompute instead of round-trip); the slab-seam
+    halo re-read is counted at ``ci`` channels.  Expansion recompute of
+    halo rows moves negligible extra flops and is excluded (the model
+    counts each expanded pixel once per Co panel)."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    n_co = math.ceil(co / (block_co or co))
+    n_slabs = math.ceil(ho / slab_h) if slab_h else 1
+    flops = (n_co * 2.0 * b * hi * wi * ci * c    # expand GEMM per Co panel
+             + n_co * 2.0 * b * ho * wo * c * hf * wf  # DW per Co panel
+             + 2.0 * b * ho * wo * c * co)             # PW-project stage
+    bytes_ = dtype_bytes * (
+        n_co * b * hi * wi * ci               # RAW input, once per Co panel
+        + n_co * n_slabs * b * ci * c         # expand W tile per grid cell
+        + n_co * n_slabs * b * hf * wf * c    # DW filter tile per grid cell
+        + n_slabs * b * c * co                # project W per (batch, slab)
+        + b * ho * wo * co                    # output stored once
+        # expanded + DW intermediates: 0 — never leave VMEM (DESIGN.md §5)
+    ) + separable_slab_halo_bytes(b, wi, ci, hf, stride, n_slabs, n_co,
+                                  dtype_bytes)
+    return Traffic(flops, bytes_)
+
+
+def separable_traffic_2stage(
+    b: int, h: int, w: int, ci: int, c: int, co: int,
+    hf: int, wf: int, stride: int,
+    block_co: int | None = None, slab_h: int | None = None,
+    bg: int = 256, bci: int = 256, bco: int = 256,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """The PR-2 lowering of an inverted residual: standalone expansion GEMM
+    (RTRD) whose ``B*H*W*C`` output round-trips HBM, then the 2-stage fused
+    DW -> PW kernel.  ``h, w`` are the UNPADDED input dims (the expansion
+    runs pre-padding); the fused stage sees the SAME-padded geometry."""
+    ho, wo = -(-h // stride), -(-w // stride)
+    hi = (ho - 1) * stride + hf
+    wi = (wo - 1) * stride + wf
+    expand = pwconv_traffic_rtrd(b * h * w, ci, c, bg, bci, bco, dtype_bytes)
+    tail = separable_traffic_fused(b, hi, wi, c, co, hf, wf, stride,
+                                   block_co=block_co, slab_h=slab_h,
+                                   dtype_bytes=dtype_bytes)
+    return Traffic(expand.flops + tail.flops,
+                   expand.bytes_hbm + tail.bytes_hbm)
+
+
+def separable_traffic_unfused3(
+    b: int, h: int, w: int, ci: int, c: int, co: int,
+    hf: int, wf: int, stride: int,
+    bg: int = 256, bci: int = 256, bco: int = 256,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Fully unfused inverted residual: expansion GEMM + standalone DW +
+    standalone PW-project, every intermediate round-tripping HBM."""
+    ho, wo = -(-h // stride), -(-w // stride)
+    hi = (ho - 1) * stride + hf
+    wi = (wo - 1) * stride + wf
+    expand = pwconv_traffic_rtrd(b * h * w, ci, c, bg, bci, bco, dtype_bytes)
+    tail = separable_traffic_unfused(b, hi, wi, c, co, hf, wf, stride,
+                                     bg, bci, bco, dtype_bytes)
+    return Traffic(expand.flops + tail.flops,
+                   expand.bytes_hbm + tail.bytes_hbm)
+
+
 def separable_intermediate_bytes(
     b: int, hi: int, wi: int, c: int, co: int, hf: int, wf: int, stride: int,
     bco: int = 256, dtype_bytes: int = 4,

@@ -7,40 +7,21 @@ output-stationary GEMM is a first-class, globally selectable feature
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 
 from repro.kernels import ops
 
-
-@dataclasses.dataclass(frozen=True)
-class KernelPolicy:
-    """Global execution policy for the paper's ops.
-
-    impl: "auto" | "xla" | "pallas". interpret=True only for CPU validation.
-    fused: run depthwise-separable blocks through the single-pass fused
-    DW+PW kernel (DESIGN.md §3) instead of composing the standalone ops —
-    the DW intermediate then never round-trips HBM.
-    block_g/co/ci: explicit GEMM grid overrides; None (default) defers to
-    the dtype-aware planner (kernels/blocking.plan_pwconv, DESIGN.md §4).
-    """
-    impl: str = "auto"
-    interpret: bool = False
-    fused: bool = False
-    block_g: Optional[int] = None
-    block_co: Optional[int] = None
-    block_ci: Optional[int] = None
-
-    def resolved(self) -> str:
-        return (
-            "pallas" if self.impl == "auto" and jax.default_backend() == "tpu"
-            else ("xla" if self.impl == "auto" else self.impl)
-        )
-
-
-DEFAULT_POLICY = KernelPolicy()
+# KernelPolicy lives at the kernel layer now (kernels/policy.py — the single
+# owner of backend resolution and the VMEM budget); re-exported here because
+# this module was its historical home.  Fusion is no longer a policy field
+# but a planner decision (core/chain.plan, DESIGN.md §5).
+from repro.kernels.policy import (  # noqa: F401  (re-export)
+    DEFAULT_POLICY,
+    KernelPolicy,
+    resolve_impl,
+)
 
 
 def pointwise(

@@ -2,25 +2,29 @@
 
 MobileNetV1 blocks (DW 3x3 + folded-BN + ReLU6, then PW + ReLU6) and the
 MobileNetV2 inverted residual (PW-expand + DW + PW-project), built entirely
-from the paper's two ops. BatchNorm is folded into the filters/bias
+from the paper's two ops.  BatchNorm is folded into the filters/bias
 (inference form), as in the paper's measured binaries.
+
+These entry points are thin shims over the declarative chain API
+(``core/chain.py``, DESIGN.md §5): each builds a `SeparableSpec`, adapts
+the legacy param dict to per-stage params, and calls ``chain.execute`` —
+the planner decides what fuses (3-stage -> 2-stage -> unfused by VMEM
+feasibility), not a user boolean.  A MobileNetV2 inverted residual now
+lowers to ONE fused kernel pass (expand-on-the-fly) at MobileNet shapes.
 
 Used by examples/mobilenet_inference.py and benchmarks/ (figs. 4-6).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.dwconv import depthwise2d
-from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
-from repro.kernels import ops
+from repro.core import chain
+from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy
 
 
 def init_separable(key, c_in: int, c_out: int, hf: int = 3, wf: int = 3):
-    k1, k2, k3, k4 = jax.random.split(key, 4)
+    k1, k2 = jax.random.split(key, 2)
     scale_dw = 1.0 / jnp.sqrt(hf * wf)
     scale_pw = 1.0 / jnp.sqrt(c_in)
     return {
@@ -41,24 +45,23 @@ def separable_block(
 ) -> jax.Array:
     """MobileNetV1 depthwise-separable block (inference, BN folded).
 
-    With ``policy.fused`` the whole block runs as one kernel pass and the DW
-    output never touches HBM (kernels/separable_fused.py, DESIGN.md §3).
+    Shim over the chain API: DW(+bias, act) -> PW(+bias, act).  The planner
+    fuses the pair into one kernel pass whenever its working set fits the
+    policy's VMEM budget (``KernelPolicy(fused=False)`` forces the old
+    unfused composition).
     """
-    if policy.fused:
-        return ops.separable_fused(
-            x, params["dw_filter"], params["pw_weight"],
-            params["dw_bias"], params["pw_bias"],
-            stride=stride, padding="same",
-            dw_activation=activation, activation=activation,
-            impl=policy.impl, interpret=policy.interpret,
-        )
-    y = depthwise2d(x, params["dw_filter"], stride=stride, policy=policy)
-    y = y + params["dw_bias"]
-    y = jnp.clip(y, 0.0, 6.0) if activation == "relu6" else jax.nn.relu(y)
-    return pointwise(
-        y, params["pw_weight"], params["pw_bias"],
-        activation=activation, policy=policy,
+    hf, wf = params["dw_filter"].shape[:2]
+    spec = chain.SeparableSpec(stages=(
+        chain.DW(stride=stride, activation=activation, hf=hf, wf=wf,
+                 bias=True),
+        chain.PW(params["pw_weight"].shape[-1], activation=activation,
+                 bias=True),
+    ))
+    stage_params = (
+        {"f": params["dw_filter"], "b": params["dw_bias"]},
+        {"w": params["pw_weight"], "b": params["pw_bias"]},
     )
+    return chain.execute(spec, stage_params, x, policy=policy)
 
 
 def init_inverted_residual(key, c_in: int, c_out: int, expand: int = 6,
@@ -81,22 +84,22 @@ def inverted_residual(
 ) -> jax.Array:
     """MobileNetV2 inverted-residual block (PW-expand -> DW -> PW-project).
 
-    With ``policy.fused`` the DW -> PW-project tail (and the residual add)
-    runs as one kernel pass; only the expansion remains a standalone GEMM.
+    Shim over the chain API.  The planner lowers the whole block to a
+    SINGLE fused kernel pass (expansion computed on the fly per row slab,
+    residual folded into the store) whenever the 3-stage working set fits
+    VMEM, degrading to expand + fused DW->project, then fully unfused.
     """
-    y = pointwise(x, params["expand_w"], activation="relu6", policy=policy)
+    hf, wf = params["dw_filter"].shape[:2]
+    c_mid = params["expand_w"].shape[-1]
     c_out = params["project_w"].shape[-1]
-    res = x if stride == 1 and x.shape[-1] == c_out else None
-    if policy.fused:
-        return ops.separable_fused(
-            y, params["dw_filter"], params["project_w"], None, None, res,
-            stride=stride, padding="same",
-            dw_activation="relu6", activation=None,
-            impl=policy.impl, interpret=policy.interpret,
-        )
-    y = depthwise2d(y, params["dw_filter"], stride=stride, policy=policy)
-    y = jnp.clip(y, 0.0, 6.0)
-    y = pointwise(y, params["project_w"], policy=policy)
-    if res is not None:
-        y = y + res
-    return y
+    spec = chain.SeparableSpec(stages=(
+        chain.PW(c_mid, activation="relu6"),
+        chain.DW(stride=stride, activation="relu6", hf=hf, wf=wf),
+        chain.PW(c_out),
+    ), residual="auto")
+    stage_params = (
+        {"w": params["expand_w"]},
+        {"f": params["dw_filter"]},
+        {"w": params["project_w"]},
+    )
+    return chain.execute(spec, stage_params, x, policy=policy)

@@ -24,11 +24,23 @@ logic:
   old ~1.5M-pixel fused-kernel ceiling: any resolution now yields a real
   :class:`BlockPlan` instead of the unfused fallback.
 
+* **whole-chain budgeting** — ``plan_separable3`` budgets the full
+  MobileNetV2 inverted residual (PW-expand -> DW -> PW-project) as ONE
+  kernel: the expansion GEMM is computed on the fly per row slab inside the
+  fused kernel, so the budget adds the raw-input window (at ``Ci``
+  channels), the expand-weight tile and the fp32 expanded value to the
+  2-stage working set.  ``ChainPlan`` / ``ChainSegment`` are the planner's
+  answer for a whole declared stage chain (``core/chain.plan``): which
+  contiguous stages fuse, at which blocks — a frozen, hashable, comparable
+  unit (the cache key for measured autotuning later).
+
 Consumers: ``kernels/dwconv2d.py`` (``plan_dwconv2d``),
-``kernels/separable_fused.py`` + ``kernels/ops.py`` (``plan_separable``),
-``kernels/ops.py::pwconv`` (``plan_pwconv``), and the analysis layer
-(``benchmarks/kernel_vmem.py``, ``benchmarks/roofline_table.py``,
-``core/intensity.py`` consumers report the planner's choices).
+``kernels/separable_fused.py`` + ``kernels/ops.py`` (``plan_separable``,
+``plan_separable3``), ``kernels/ops.py::pwconv`` (``plan_pwconv``),
+``core/chain.py`` + ``kernels/lowering.py`` (``ChainPlan``), and the
+analysis layer (``benchmarks/kernel_vmem.py``,
+``benchmarks/roofline_table.py``, ``core/intensity.py`` consumers report
+the planner's choices).
 """
 from __future__ import annotations
 
@@ -243,6 +255,145 @@ def plan_separable(ho: int, wo: int, c: int, co: int, *,
                     dtype_bytes=nb,
                 )
     return None
+
+
+# ---------------------------------------------------------------------------
+# 3-stage fused chain (PW-expand -> DW -> PW-project): expand-on-the-fly
+# ---------------------------------------------------------------------------
+
+def fused3_vmem_bytes(wo: int, slab_h: int, ci: int, cb: int, cob: int,
+                      hf: int = 3, wf: int = 3, stride: int = 1,
+                      itemsize: int = 4, residual: bool = False) -> int:
+    """Working-set bytes of the 3-stage fused kernel (expand-on-the-fly) at
+    blocks ``(cb, cob, slab_h)`` with raw-input channels ``ci``.
+
+    Relative to :func:`fused_vmem_bytes` the input slab is the RAW input at
+    ``ci`` channels (fetched whole per grid cell — it is the expand GEMM's
+    A-operand), and each expanded-channel slab adds the expand-weight tile
+    ``(ci, cb)`` plus the fp32 expanded value ``(slab_hi, wiu, cb)`` that
+    replaces the streamed input as the DW stage's operand.  Single source of
+    truth for :func:`plan_separable3` and ``benchmarks/kernel_vmem.py``.
+    """
+    slab_hi = (slab_h - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    out_side = slab_h * wo * cob * (ACC_BYTES + itemsize)
+    if residual:
+        out_side += 2 * slab_h * wo * cob * itemsize
+    out_side += 2 * slab_hi * wiu * ci * itemsize  # raw input, dbl-buffered
+    per_c = (2 * ci * itemsize                 # expand W tile, dbl-buffered
+             + slab_hi * wiu * ACC_BYTES       # expanded value (fp32, VMEM)
+             + hf * wf * itemsize              # DW filter tile
+             + slab_h * wo * ACC_BYTES         # DW intermediate (fp32 value)
+             + 2 * cob * itemsize)             # PW weight tile, dbl-buffered
+    return out_side + cb * per_c
+
+
+def _fused3_plan_at(c: int, ci: int, slab_h: int, cob: int, wo: int,
+                    hf: int, wf: int, stride: int, itemsize: int,
+                    residual: bool, vmem_budget: int,
+                    min_cb: int) -> Optional[int]:
+    """Largest snapped expanded-channel block >= min_cb that fits, or None."""
+    base = fused3_vmem_bytes(wo, slab_h, ci, 0, cob, hf, wf, stride,
+                             itemsize, residual)
+    per_c = fused3_vmem_bytes(wo, slab_h, ci, 1, cob, hf, wf, stride,
+                              itemsize, residual) - base
+    rem = vmem_budget - base
+    if rem < per_c:
+        return None
+    cb = snap_channels(int(rem // per_c), c)
+    return cb if cb >= min_cb else None
+
+
+def plan_separable3(ho: int, wo: int, ci: int, c: int, co: int, *,
+                    stride: int = 1, hf: int = 3, wf: int = 3,
+                    dtype=jnp.float32,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                    residual: bool = False) -> Optional[BlockPlan]:
+    """Block plan for the 3-stage fused chain (expand -> DW -> project), or
+    None when nothing fits (callers degrade to the 2-stage plan:
+    standalone expand GEMM + :func:`plan_separable`, then to unfused).
+
+    ``ci`` is the raw-input channel count, ``c`` the expanded (DW) width and
+    ``co`` the projected output width.  Same preference order as
+    :func:`plan_separable`: single Co panel > largest row slab > largest
+    expanded-channel slab, full-lane if possible.  The expanded intermediate
+    dominates the budget (fp32 ``(slab_hi, wiu, cb)`` per reduction step),
+    so high resolutions slab earlier than the 2-stage kernel does.
+    """
+    nb = dtype_bytes(dtype)
+    halo = max(hf - stride, 0)
+    for cob in co_candidates(co):
+        for min_cb in (min(c, LANES), 1):
+            for slab_h in slab_candidates(ho):
+                cb = _fused3_plan_at(c, ci, slab_h, cob, wo, hf, wf, stride,
+                                     nb, residual, vmem_budget, min_cb)
+                if cb is None:
+                    continue
+                n_slabs = -(-ho // slab_h)
+                return BlockPlan(
+                    block_c=cb, block_co=cob, slab_h=slab_h,
+                    n_slabs=n_slabs,
+                    halo_rows=halo if n_slabs > 1 else 0,
+                    vmem_bytes=fused3_vmem_bytes(
+                        wo, slab_h, ci, cb, cob, hf, wf, stride, nb,
+                        residual),
+                    dtype_bytes=nb,
+                )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# whole-chain plan schema (core/chain.plan -> kernels/lowering.lower)
+# ---------------------------------------------------------------------------
+
+#: Segment kinds a chain lowers to.  ``fused3`` = one kernel pass for
+#: PW-expand -> DW -> PW-project (expand-on-the-fly); ``fused2`` = one pass
+#: for DW -> PW (the PR-2 kernel); ``pw`` / ``dw`` = standalone kernels.
+SEGMENT_KINDS = ("fused3", "fused2", "pw", "dw")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSegment:
+    """One lowering unit of a stage chain: which contiguous spec stages run
+    as one kernel pass, and at which block shapes."""
+    kind: str                      # one of SEGMENT_KINDS
+    stages: tuple[int, ...]        # indices into the spec's stage tuple
+    plan: BlockPlan                # block choices for this segment's kernel
+
+    def __post_init__(self):
+        assert self.kind in SEGMENT_KINDS, self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """The planner's answer for a whole declared stage chain (DESIGN.md §5).
+
+    Produced by ``core/chain.plan`` and consumed by
+    ``kernels/lowering.lower``; frozen + hashable so it is a cacheable,
+    comparable unit (the key for measured autotuning later).
+
+    ``residual``: the spec's residual connection is active at these shapes
+    (stride product 1, c_out == c_in).  ``residual_fused``: it is folded
+    into the final fused segment's kernel pass (otherwise the lowering adds
+    it as a separate elementwise op).
+    """
+    segments: tuple[ChainSegment, ...]
+    residual: bool
+    residual_fused: bool
+    dtype_bytes: int
+    vmem_budget: int
+
+    @property
+    def n_kernel_passes(self) -> int:
+        return len(self.segments) + (
+            1 if self.residual and not self.residual_fused else 0)
+
+    @property
+    def fully_fused(self) -> bool:
+        """The whole chain (incl. any residual) runs as ONE kernel pass."""
+        return len(self.segments) == 1 and self.segments[0].kind in (
+            "fused3", "fused2") and (self.residual_fused or
+                                     not self.residual)
 
 
 # ---------------------------------------------------------------------------

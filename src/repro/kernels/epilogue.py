@@ -1,0 +1,37 @@
+"""Shared bias + activation epilogue for every kernel and oracle.
+
+One implementation of the op-tail semantics (add bias, apply activation)
+used by the pure-jnp oracles (``ref.py``), the Pallas kernel bodies
+(``pwconv.py``, ``separable_fused.py`` — the same jnp ops trace inside a
+kernel), and the chain lowering's unfused fallback (``lowering.py``).  It
+was previously a private ``ref._epilogue`` that ``ops.separable_fused``'s
+fallback path reached into, duplicated once more inside ``pwconv``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: Activations every op in this package accepts (all map 0 -> 0, which the
+#: fused expand-on-the-fly path relies on: zero SAME-padding pixels stay
+#: zero through a bias-free expansion — see kernels/separable_fused.py).
+ACTIVATIONS = ("relu", "relu6", "gelu", "silu")
+
+
+def apply_epilogue(y, bias=None, activation: Optional[str] = None):
+    """``y + bias`` then ``activation(y)``; bias broadcast in ``y.dtype``."""
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation is None:
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    raise ValueError(f"unknown activation {activation!r}")

@@ -1,0 +1,127 @@
+"""Lower a ChainPlan onto kernels: the execute half of spec -> plan -> run.
+
+``core/chain.plan`` decides WHICH contiguous stages of a declared separable
+chain fuse (DESIGN.md §5); this module maps that decision onto the actual
+executables:
+
+* ``fused3`` segments -> ``separable_fused_pallas(expand_w=...)`` — the
+  whole PW-expand -> DW -> PW-project inverted residual as ONE kernel pass
+  (expand-on-the-fly, neither intermediate in HBM);
+* ``fused2`` segments -> ``separable_fused_pallas`` (the PR-2 DW -> PW
+  kernel);
+* ``pw`` / ``dw`` segments -> the standalone ``ops.pwconv`` /
+  ``ops.dwconv2d`` kernels;
+* on the XLA backend every fused segment runs ``ref.separable_fused_ref``
+  (same fusion numerics — fp32 intermediates — without Pallas).
+
+The lowering never re-plans: each segment executes at exactly the block
+shapes its ``ChainSegment.plan`` carries, so a ``ChainPlan`` is a complete,
+reproducible execution recipe (and therefore a cacheable autotuning unit).
+
+Stage objects are duck-typed (``features``/``activation``/``bias`` for PW,
+``stride``/``hf``/``wf``/``padding``/``activation``/``bias`` for DW) so this
+module depends only on the kernel layer; the spec dataclasses live in
+``core/chain.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+
+from repro.kernels import ops, ref
+from repro.kernels.blocking import ChainPlan
+from repro.kernels.epilogue import apply_epilogue
+from repro.kernels.policy import DEFAULT_POLICY, KernelPolicy
+from repro.kernels.separable_fused import separable_fused_pallas
+
+#: Per-stage parameter leaves the lowering consumes: PW stages take
+#: ``{"w": (Ci, Co)[, "b": (Co,)]}``, DW stages ``{"f": (Hf, Wf, C)[,
+#: "b": (C,)]}``; params are a sequence aligned with ``spec.stages``.
+PARAM_KEYS = {"pw": ("w", "b"), "dw": ("f", "b")}
+
+
+def _run_fused(seg, stages, params, y, res, *, impl, interpret):
+    """One fused segment (2- or 3-stage) as a single kernel pass."""
+    if seg.kind == "fused3":
+        i_ex, i_dw, i_pw = seg.stages
+        expand_w = params[i_ex]["w"]
+        expand_act = stages[i_ex].activation
+    else:
+        i_dw, i_pw = seg.stages
+        expand_w, expand_act = None, None
+    d = stages[i_dw]
+    proj = stages[i_pw]
+    dw_f = params[i_dw]["f"]
+    dw_b = params[i_dw].get("b")
+    pw_w = params[i_pw]["w"]
+    pw_b = params[i_pw].get("b")
+    if impl == "xla":
+        return ref.separable_fused_ref(
+            y, dw_f, pw_w, dw_b, pw_b, res,
+            expand_w=expand_w, expand_activation=expand_act,
+            stride=d.stride, padding=d.padding,
+            dw_activation=d.activation, activation=proj.activation,
+        )
+    if d.padding.lower() == "same":
+        y = ops.pad_same(y, d.hf, d.wf, d.stride)
+    elif d.padding.lower() != "valid":
+        raise ValueError(d.padding)
+    return separable_fused_pallas(
+        y, dw_f, pw_w, dw_b, pw_b, res,
+        expand_w=expand_w, expand_activation=expand_act,
+        stride=d.stride, dw_activation=d.activation,
+        activation=proj.activation,
+        block_c=seg.plan.block_c, block_co=seg.plan.block_co,
+        slab_h=seg.plan.slab_h, interpret=interpret,
+    )
+
+
+def lower(spec, chain_plan: ChainPlan,
+          policy: KernelPolicy = DEFAULT_POLICY,
+          ) -> Callable[[Sequence[dict], jax.Array], jax.Array]:
+    """Map a planned chain onto kernels; returns ``run(params, x)``.
+
+    ``params`` is a sequence of per-stage dicts aligned with
+    ``spec.stages`` (see :data:`PARAM_KEYS`).  The residual source is the
+    chain input ``x``; it rides inside the final fused kernel pass when
+    ``chain_plan.residual_fused``, else it is added as a separate op.
+    """
+    impl = policy.resolved()
+    interpret = policy.interpret
+    stages = spec.stages
+    segments = chain_plan.segments
+
+    def run(params: Sequence[dict], x: jax.Array) -> jax.Array:
+        assert len(params) == len(stages), (len(params), len(stages))
+        res = x if chain_plan.residual else None
+        y = x
+        for si, seg in enumerate(segments):
+            seg_res = res if (chain_plan.residual_fused
+                              and si == len(segments) - 1) else None
+            if seg.kind in ("fused3", "fused2"):
+                y = _run_fused(seg, stages, params, y, seg_res,
+                               impl=impl, interpret=interpret)
+            elif seg.kind == "pw":
+                st = stages[seg.stages[0]]
+                p = params[seg.stages[0]]
+                y = ops.pwconv(
+                    y, p["w"], p.get("b"), activation=st.activation,
+                    impl=impl, interpret=interpret,
+                    block_g=policy.block_g or seg.plan.block_g,
+                    block_co=policy.block_co or seg.plan.block_co,
+                    block_ci=policy.block_ci or seg.plan.block_c,
+                )
+            else:  # "dw"
+                st = stages[seg.stages[0]]
+                p = params[seg.stages[0]]
+                y = ops.dwconv2d(
+                    y, p["f"], stride=st.stride, padding=st.padding,
+                    impl=impl, interpret=interpret,
+                )
+                y = apply_epilogue(y, p.get("b"), st.activation)
+        if chain_plan.residual and not chain_plan.residual_fused:
+            y = y + res
+        return y
+
+    return run

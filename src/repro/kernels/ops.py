@@ -20,18 +20,22 @@ import jax.numpy as jnp
 from repro.kernels import blocking, ref
 from repro.kernels.dwconv1d import dwconv1d_causal_pallas
 from repro.kernels.dwconv2d import dwconv2d_pallas
+from repro.kernels.epilogue import apply_epilogue
+from repro.kernels.policy import resolve_impl
 from repro.kernels.pwconv import pwconv_pallas
 from repro.kernels.separable_fused import separable_fused_pallas
 
-
-def _resolve(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return impl
+# Single source of the "auto -> pallas on TPU else xla" rule
+# (kernels/policy.py); `_resolve` stays as an alias for old call sites.
+_resolve = resolve_impl
 
 
-def _pad_same(x: jax.Array, hf: int, wf: int, stride: int) -> jax.Array:
-    """Explicit SAME padding (so the Pallas kernel only sees VALID)."""
+def pad_same(x: jax.Array, hf: int, wf: int, stride: int) -> jax.Array:
+    """Explicit SAME padding (so the Pallas kernels only see VALID).
+
+    Public: the chain lowering (kernels/lowering.py) applies it before
+    handing fused segments to the VALID-geometry kernels.
+    """
     _, hi, wi, _ = x.shape
     ho = -(-hi // stride)
     wo = -(-wi // stride)
@@ -40,6 +44,9 @@ def _pad_same(x: jax.Array, hf: int, wf: int, stride: int) -> jax.Array:
     return jnp.pad(
         x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0))
     )
+
+
+_pad_same = pad_same
 
 
 def dwconv2d(
@@ -88,6 +95,8 @@ def separable_fused(
     pw_bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     *,
+    expand_w: Optional[jax.Array] = None,
+    expand_activation: Optional[str] = "relu6",
     stride: int = 1,
     padding: str = "same",
     dw_activation: Optional[str] = "relu6",
@@ -96,35 +105,61 @@ def separable_fused(
     interpret: bool = False,
     vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
 ) -> jax.Array:
-    """Fused depthwise-separable block: DW -> act -> PW in one kernel pass.
+    """Fused depthwise-separable block: [PW-expand ->] DW -> act -> PW in
+    one kernel pass.
 
-    x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co) -> (B,Ho,Wo,Co). On the
-    pallas path the DW intermediate never touches HBM (DESIGN.md §3). Block
-    shapes — including the row-slab dimension that keeps the accumulator
-    VMEM-sized at any resolution — come from
-    :func:`repro.kernels.blocking.plan_separable`; only when even the
-    minimal plan exceeds the budget does the op fall back to the unfused
-    Pallas composition. The fallback is semantically the same block but
-    rounds the DW intermediate to the activation dtype between the two
-    kernels (the fused path keeps it fp32 into the GEMM), so sub-fp32
-    dtypes can differ by intermediate-rounding error across the
-    VMEM-feasibility boundary.
+    x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co) -> (B,Ho,Wo,Co); with
+    ``expand_w`` (Ci, C) the input is (B,Hi,Wi,Ci) and the bias-free
+    expansion GEMM is computed on the fly inside the kernel.  On the pallas
+    path neither the expanded tensor nor the DW intermediate ever touches
+    HBM (DESIGN.md §3/§5).  Block shapes — including the row-slab dimension
+    that keeps the accumulator VMEM-sized at any resolution — come from
+    :func:`repro.kernels.blocking.plan_separable` /
+    :func:`~repro.kernels.blocking.plan_separable3`.  When a plan does not
+    fit the budget the op degrades exactly like the chain planner
+    (DESIGN.md §5): 3-stage fused -> standalone expand + 2-stage fused ->
+    unfused Pallas composition.  The unfused fallback is semantically the
+    same block but rounds the intermediates to the activation dtype between
+    kernels (the fused paths keep them fp32), so sub-fp32 dtypes can differ
+    by intermediate-rounding error across the VMEM-feasibility boundary.
+
+    Prefer the declarative chain API (``core/chain.py``) for new code; this
+    wrapper remains the kernel-level entry the lowering maps onto.
     """
-    impl = _resolve(impl)
+    impl = resolve_impl(impl)
     if impl == "xla":
         return ref.separable_fused_ref(
             x, dw_f, pw_w, dw_bias, pw_bias, residual,
+            expand_w=expand_w, expand_activation=expand_activation,
             stride=stride, padding=padding,
             dw_activation=dw_activation, activation=activation,
         )
     hf, wf = dw_f.shape[0], dw_f.shape[1]
     if padding.lower() == "same":
-        x = _pad_same(x, hf, wf, stride)
+        x = pad_same(x, hf, wf, stride)
     elif padding.lower() != "valid":
         raise ValueError(padding)
     hi, wi = x.shape[1], x.shape[2]
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
+    if expand_w is not None:
+        plan3 = blocking.plan_separable3(
+            ho, wo, expand_w.shape[0], expand_w.shape[1], pw_w.shape[-1],
+            stride=stride, hf=hf, wf=wf, dtype=x.dtype,
+            vmem_budget=vmem_budget, residual=residual is not None)
+        if plan3 is not None:
+            return separable_fused_pallas(
+                x, dw_f, pw_w, dw_bias, pw_bias, residual,
+                expand_w=expand_w, expand_activation=expand_activation,
+                stride=stride, dw_activation=dw_activation,
+                activation=activation, block_c=plan3.block_c,
+                block_co=plan3.block_co, slab_h=plan3.slab_h,
+                interpret=interpret,
+            )
+        # Degrade to the 2-stage path: standalone expansion GEMM (its output
+        # rounds to the activation dtype), then DW -> PW below.
+        x = pwconv(x, expand_w, activation=expand_activation,
+                   impl="pallas", interpret=interpret)
     plan = blocking.plan_separable(
         ho, wo, x.shape[-1], pw_w.shape[-1], stride=stride, hf=hf, wf=wf,
         dtype=x.dtype, vmem_budget=vmem_budget,
@@ -135,7 +170,7 @@ def separable_fused(
         y = dwconv2d_pallas(x, dw_f, stride=stride, interpret=interpret)
         if dw_bias is not None:
             y = y + dw_bias
-        y = ref._epilogue(y, None, dw_activation).astype(x.dtype)
+        y = apply_epilogue(y, None, dw_activation).astype(x.dtype)
         out = pwconv(
             y, pw_w, pw_bias, activation=activation,
             impl="pallas", interpret=interpret,

@@ -1,0 +1,72 @@
+"""Execution policy for the paper's ops — the single backend-resolution rule.
+
+``resolve_impl`` is the ONE place the "auto -> pallas on TPU, else xla" rule
+lives.  It used to be implemented twice (``kernels/ops._resolve`` and
+``core.pwconv.KernelPolicy.resolved``), which is exactly the kind of
+duplicated decision the declarative chain API removes; both now call here.
+
+``KernelPolicy`` is policy-only: *how* to execute (backend, interpret mode,
+VMEM budget, explicit GEMM grid overrides) — never *what* to fuse.  Fusion
+is a planner decision (``core/chain.plan`` -> ``ChainPlan``, DESIGN.md §5):
+the planner fuses the longest stage run whose working set fits the policy's
+``vmem_budget`` and degrades 3-fused -> 2-fused -> unfused on its own.  The
+legacy ``fused`` boolean survives one release as a deprecated tri-state
+override for the old call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.kernels.blocking import DEFAULT_VMEM_BUDGET
+
+
+def resolve_impl(impl: str) -> str:
+    """'auto' -> 'pallas' on TPU backends, 'xla' elsewhere; else pass-through.
+
+    Single source of truth for backend resolution (used by ``kernels/ops``,
+    ``kernels/lowering`` and ``KernelPolicy.resolved``).
+    """
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl {impl!r} (want auto|pallas|xla)")
+    return impl
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Global execution policy for the paper's ops.
+
+    impl: "auto" | "xla" | "pallas". interpret=True only for CPU validation.
+    vmem_budget: HBM->VMEM working-set budget the chain planner and the
+    per-kernel planners size blocks against (DESIGN.md §4/§5).
+    block_g/co/ci: explicit GEMM grid overrides; None (default) defers to
+    the dtype-aware planner (kernels/blocking.plan_pwconv).
+
+    fused: DEPRECATED. Fusion is a planner decision now — ``None`` (the
+    default) lets ``core/chain.plan`` fuse whatever fits the budget;
+    ``False`` forces the unfused composition (the old default behavior);
+    ``True`` is accepted for old call sites and means the same as ``None``.
+    """
+    impl: str = "auto"
+    interpret: bool = False
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+    fused: Optional[bool] = None
+    block_g: Optional[int] = None
+    block_co: Optional[int] = None
+    block_ci: Optional[int] = None
+
+    def resolved(self) -> str:
+        return resolve_impl(self.impl)
+
+    @property
+    def fusion_allowed(self) -> bool:
+        """Planner gate from the deprecated knob: only ``fused=False``
+        (the explicit legacy opt-out) disables fusion."""
+        return self.fused is not False
+
+
+DEFAULT_POLICY = KernelPolicy()

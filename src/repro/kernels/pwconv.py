@@ -25,21 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _epilogue(acc, bias_blk, activation):
-    if bias_blk is not None:
-        acc = acc + bias_blk.astype(acc.dtype)
-    if activation == "relu":
-        acc = jnp.maximum(acc, 0.0)
-    elif activation == "relu6":
-        acc = jnp.clip(acc, 0.0, 6.0)
-    elif activation == "gelu":
-        acc = jax.nn.gelu(acc)
-    elif activation == "silu":
-        acc = jax.nn.silu(acc)
-    elif activation is not None:
-        raise ValueError(f"unknown activation {activation!r}")
-    return acc
+# Shared bias+activation tail (kernels/epilogue.py) — the same jnp ops trace
+# inside the kernel body; `_epilogue` stays as an alias for old call sites.
+from repro.kernels.epilogue import apply_epilogue as _epilogue
 
 
 def _rtrd_kernel(*refs, nk: int, activation, out_dtype):

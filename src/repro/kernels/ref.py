@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.epilogue import apply_epilogue
+
 # ---------------------------------------------------------------------------
 # Depthwise 2-D convolution (paper Alg. 1/4), NHWC, filter (Hf, Wf, C).
 # ---------------------------------------------------------------------------
@@ -105,20 +107,9 @@ def dwconv1d_step_ref(
 # ---------------------------------------------------------------------------
 
 
-def _epilogue(y: jax.Array, bias: Optional[jax.Array], activation: Optional[str]):
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    if activation is None:
-        return y
-    if activation == "relu":
-        return jax.nn.relu(y)
-    if activation == "relu6":
-        return jnp.clip(y, 0.0, 6.0)
-    if activation == "gelu":
-        return jax.nn.gelu(y)
-    if activation == "silu":
-        return jax.nn.silu(y)
-    raise ValueError(f"unknown activation {activation!r}")
+# The bias+activation tail is shared package-wide (kernels/epilogue.py);
+# `_epilogue` stays as an alias for old call sites.
+_epilogue = apply_epilogue
 
 
 @jax.custom_vjp
@@ -172,6 +163,8 @@ def separable_fused_ref(
     pw_bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     *,
+    expand_w: Optional[jax.Array] = None,
+    expand_activation: Optional[str] = "relu6",
     stride: int = 1,
     padding: str = "valid",
     dw_activation: Optional[str] = "relu6",
@@ -181,9 +174,16 @@ def separable_fused_ref(
 
     Same math as the fused kernel: the DW output stays fp32 into the GEMM
     (the unfused composition rounds it to the activation dtype in between).
+    With ``expand_w`` (Ci, C) the bias-free PW-expand stage runs first, also
+    kept fp32 into the DW stage (the 3-stage chain's numerics).
     """
+    y = x.astype(jnp.float32)
+    if expand_w is not None:
+        y = jnp.dot(y, expand_w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        y = _epilogue(y, None, expand_activation)
     y = dwconv2d_ref(
-        x.astype(jnp.float32), dw_f.astype(jnp.float32),
+        y, dw_f.astype(jnp.float32),
         stride=stride, padding=padding,
     )
     if dw_bias is not None:

@@ -1,4 +1,6 @@
-"""Fused depthwise-separable block Pallas kernel (DW3x3 -> act -> PW GEMM).
+"""Fused depthwise-separable block Pallas kernel (DW3x3 -> act -> PW GEMM),
+with an optional expand-on-the-fly stage (PW-expand -> DW -> PW-project in
+ONE pass — the full MobileNetV2 inverted residual).
 
 The paper's thesis one level up (DESIGN.md §3): ``dwconv2d`` and ``pwconv``
 are both memory-bound, and composing them through HBM makes the DW output —
@@ -41,10 +43,25 @@ activation: padded DW channels multiply zero-padded PW weight rows, so their
 contribution is exactly zero. Row padding (when ``slab_h`` does not divide
 ``Ho``) computes zero-input garbage rows that are cropped before return.
 
-All block choices come from ``kernels.blocking.plan_separable`` (dtype-aware
-VMEM budget, Co-panel and row-slab enumeration); when even the minimal plan
-exceeds the budget the planner returns None and callers fall back to the
-unfused composition (``ops.separable_fused``).
+Expand-on-the-fly (the 3-stage V2 chain, DESIGN.md §5): with ``expand_w``
+``(Ci, C)`` given, the kernel's input is the RAW ``Ci``-channel tensor and
+each reduction step first computes its expanded-channel slab as a per-slab
+GEMM — ``x_window.reshape(slab_hi*Wiu, Ci) @ expand_w[:, k*Cb:(k+1)*Cb]``
+into a VMEM fp32 value — applies the expand activation, and feeds that
+value to the DW shift-and-FMA in place of the streamed input.  Neither the
+expanded tensor (``B*Hi*Wi*C`` — 6x the input at the usual expansion
+factor) nor the DW output ever exists in HBM.  Restriction: the expansion
+must be bias-free, because SAME padding is applied to the raw input before
+the kernel and a bias would make padding pixels expand to ``act(bias) != 0``
+(every supported activation maps 0 -> 0, so bias-free expand commutes with
+zero padding).  ``core/chain.plan`` degrades to the 2-stage path when the
+spec declares an expand bias.
+
+All block choices come from ``kernels.blocking.plan_separable`` /
+``plan_separable3`` (dtype-aware VMEM budget, Co-panel and row-slab
+enumeration); when even the minimal plan exceeds the budget the planner
+returns None and callers fall back to the unfused composition
+(``ops.separable_fused``).
 
 TPU note: the overlapping input windows use ``pl.unblocked`` indexing,
 validated in interpret mode like the rest of this package; Mosaic sublane
@@ -61,21 +78,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import blocking
-from repro.kernels.pwconv import _epilogue
+from repro.kernels.epilogue import apply_epilogue as _epilogue
 
 
 def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
-                  dw_activation, activation, has_dwb: bool, has_pwb: bool,
+                  dw_activation, activation, has_exp: bool,
+                  expand_activation, has_dwb: bool, has_pwb: bool,
                   has_res: bool, out_dtype):
-    """refs = (x, f, [dw_bias,] w, [pw_bias,] [residual,] out, acc).
+    """refs = (x, [expand_w,] f, [dw_bias,] w, [pw_bias,] [residual,] out,
+    acc).
 
     Blocks: x (1, slab_hi, Wiu, Cb) — the overlapping input window of this
-    row slab; f (Hf, Wf, Cb); dw_bias (1, Cb); w (Cb, Cob); pw_bias
-    (1, Cob); residual (1, slab_h, Wo, Cob); out (1, slab_h, Wo, Cob);
-    acc VMEM scratch (slab_h*Wo, Cob) fp32.
+    row slab (with expand: (1, slab_hi, Wiu, Ci), the RAW input, identical
+    for every reduction step); expand_w (Ci, Cb); f (Hf, Wf, Cb); dw_bias
+    (1, Cb); w (Cb, Cob); pw_bias (1, Cob); residual (1, slab_h, Wo, Cob);
+    out (1, slab_h, Wo, Cob); acc VMEM scratch (slab_h*Wo, Cob) fp32.
     """
     it = iter(refs)
     x_ref = next(it)
+    ew_ref = next(it) if has_exp else None
     f_ref = next(it)
     dwb_ref = next(it) if has_dwb else None
     w_ref = next(it)
@@ -85,15 +106,26 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
     acc_ref = next(it)
 
     _, slab_h, wo, cob = out_ref.shape
-    cb = x_ref.shape[3]
+    cb = f_ref.shape[2]
     k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # --- DW stage: shift-and-FMA over the channel slab (dwconv2d Alg. 4) ---
     x = x_ref[0].astype(jnp.float32)
+    if ew_ref is not None:
+        # --- expand stage: this step's expanded-channel slab, on the fly ---
+        # (slab_hi*Wiu, Ci) @ (Ci, Cb) -> fp32 VMEM value; never in HBM.
+        slab_hi, wiu, ci = x.shape
+        ex = jnp.dot(
+            x.reshape(slab_hi * wiu, ci),
+            ew_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        x = _epilogue(ex, None, expand_activation).reshape(slab_hi, wiu, cb)
+
+    # --- DW stage: shift-and-FMA over the channel slab (dwconv2d Alg. 4) ---
     f = f_ref[...].astype(jnp.float32)
     s = stride
     dw = jnp.zeros((slab_h, wo, cb), jnp.float32)
@@ -132,8 +164,9 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "dw_activation", "activation", "block_c",
-                     "block_co", "slab_h", "interpret"),
+    static_argnames=("stride", "dw_activation", "activation",
+                     "expand_activation", "block_c", "block_co", "slab_h",
+                     "interpret"),
 )
 def separable_fused_pallas(
     x: jax.Array,
@@ -143,6 +176,8 @@ def separable_fused_pallas(
     pw_bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     *,
+    expand_w: Optional[jax.Array] = None,
+    expand_activation: Optional[str] = "relu6",
     stride: int = 1,
     dw_activation: Optional[str] = "relu6",
     activation: Optional[str] = None,
@@ -154,16 +189,27 @@ def separable_fused_pallas(
     """Fused DW+PW block. x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co)
     [+ dw_bias (C,), pw_bias (Co,), residual (B,Ho,Wo,Co)] -> (B,Ho,Wo,Co).
 
-    VALID geometry — SAME padding is applied by the wrapper (ops.py).
-    Block shapes not given explicitly come from
-    :func:`repro.kernels.blocking.plan_separable`; raises ValueError when
-    even the minimal plan exceeds the VMEM budget (callers should have
-    consulted the planner and taken the unfused path instead).
+    With ``expand_w`` (Ci, C) the input is the RAW (B,Hi,Wi,Ci) tensor and
+    the kernel runs the full 3-stage chain — bias-free PW-expand (computed
+    on the fly per row slab) -> DW -> PW-project — in one pass.
+
+    VALID geometry — SAME padding is applied by the wrapper (ops.py /
+    lowering.py).  Block shapes not given explicitly come from
+    :func:`repro.kernels.blocking.plan_separable` (or ``plan_separable3``
+    with expand); raises ValueError when even the minimal plan exceeds the
+    VMEM budget (callers should have consulted the planner and taken a
+    degraded path instead).
     """
-    b, hi, wi, c = x.shape
+    b, hi, wi, c_in = x.shape
     hf, wf, cf = dw_f.shape
-    ci, co = pw_w.shape
-    assert c == cf == ci, (x.shape, dw_f.shape, pw_w.shape)
+    cw, co = pw_w.shape
+    if expand_w is not None:
+        ci_raw, c = expand_w.shape
+        assert ci_raw == c_in and c == cf == cw, (
+            x.shape, expand_w.shape, dw_f.shape, pw_w.shape)
+    else:
+        c = c_in
+        assert c == cf == cw, (x.shape, dw_f.shape, pw_w.shape)
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
     assert ho >= 1 and wo >= 1, "input smaller than filter"
@@ -171,9 +217,14 @@ def separable_fused_pallas(
     wiu = (wo - 1) * stride + wf
 
     if block_c is None or block_co is None or slab_h is None:
-        plan = blocking.plan_separable(
-            ho, wo, c, co, stride=stride, hf=hf, wf=wf, dtype=x.dtype,
-            residual=residual is not None)
+        if expand_w is not None:
+            plan = blocking.plan_separable3(
+                ho, wo, c_in, c, co, stride=stride, hf=hf, wf=wf,
+                dtype=x.dtype, residual=residual is not None)
+        else:
+            plan = blocking.plan_separable(
+                ho, wo, c, co, stride=stride, hf=hf, wf=wf, dtype=x.dtype,
+                residual=residual is not None)
         if plan is None and (block_c is None or block_co is None):
             raise ValueError(
                 f"no fused block plan fits VMEM for {(hi, wi, c, co)}; "
@@ -189,11 +240,16 @@ def separable_fused_pallas(
     ho_p = n_slabs * sh
     slab_hi = (sh - 1) * stride + hf
 
-    # Channel / Co padding (zero rows of pw_w nullify padded DW channels).
+    # Channel / Co padding (zero rows of pw_w nullify padded DW channels;
+    # with expand, zero COLUMNS of expand_w make the padded expanded
+    # channels exactly zero — every activation maps 0 -> 0).
     pad_c = (-c) % cb
     pad_co = (-co) % cob
     if pad_c:
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+        if expand_w is not None:
+            expand_w = jnp.pad(expand_w, ((0, 0), (0, pad_c)))
+        else:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
         dw_f = jnp.pad(dw_f, ((0, 0), (0, 0), (0, pad_c)))
         pw_w = jnp.pad(pw_w, ((0, pad_c), (0, 0)))
         if dw_bias is not None:
@@ -217,16 +273,28 @@ def separable_fused_pallas(
         residual = jnp.pad(residual, ((0, 0), (0, ho_p - ho), (0, 0), (0, 0)))
 
     # Input windows of adjacent slabs overlap by (hf - stride) halo rows, so
-    # the x BlockSpec uses element-offset (unblocked) indexing.
-    in_specs = [
-        pl.BlockSpec(
+    # the x BlockSpec uses element-offset (unblocked) indexing.  With expand
+    # the window carries ALL raw channels (Ci is small; the reduction steps
+    # slab the EXPANDED channels via the expand_w block instead).
+    if expand_w is not None:
+        x_spec = pl.BlockSpec(
+            (1, slab_hi, wiu, c_in),
+            lambda i, s, j, k: (i, s * sh * stride, 0, 0),
+            indexing_mode=pl.unblocked,
+        )
+    else:
+        x_spec = pl.BlockSpec(
             (1, slab_hi, wiu, cb),
             lambda i, s, j, k: (i, s * sh * stride, 0, k * cb),
             indexing_mode=pl.unblocked,
-        ),
-        pl.BlockSpec((hf, wf, cb), lambda i, s, j, k: (0, 0, k)),
-    ]
-    inputs = [x, dw_f]
+        )
+    in_specs = [x_spec]
+    inputs = [x]
+    if expand_w is not None:
+        in_specs.append(pl.BlockSpec((c_in, cb), lambda i, s, j, k: (0, k)))
+        inputs.append(expand_w)
+    in_specs.append(pl.BlockSpec((hf, wf, cb), lambda i, s, j, k: (0, 0, k)))
+    inputs.append(dw_f)
     if dw_bias is not None:
         in_specs.append(pl.BlockSpec((1, cb), lambda i, s, j, k: (0, k)))
         inputs.append(dw_bias.reshape(1, -1))
@@ -243,6 +311,7 @@ def separable_fused_pallas(
     kernel = functools.partial(
         _fused_kernel, hf=hf, wf=wf, stride=stride, nk=nk,
         dw_activation=dw_activation, activation=activation,
+        has_exp=expand_w is not None, expand_activation=expand_activation,
         has_dwb=dw_bias is not None, has_pwb=pw_bias is not None,
         has_res=residual is not None, out_dtype=x.dtype,
     )

@@ -1,0 +1,366 @@
+"""The declarative chain API (core/chain.py): plan() golden tests (which
+stages fuse at which shapes/dtypes/budgets), 3-stage fused vs unfused-
+composition parity (fp32 + bf16, stride 1/2, with/without residual), and
+shim-equivalence of the legacy entry points, plus the ChainPlan traffic
+invariant (3-stage < 2-stage < unfused HBM bytes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chain
+from repro.core import intensity as it
+from repro.core.separable import (
+    init_inverted_residual,
+    init_separable,
+    inverted_residual,
+    separable_block,
+)
+from repro.kernels import blocking, ref
+from repro.kernels.policy import KernelPolicy
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+def _kinds(cp):
+    return [s.kind for s in cp.segments]
+
+
+# ---------------------------------------------------------------------------
+# plan() golden tests
+# ---------------------------------------------------------------------------
+
+# Every MobileNetV2 inverted-residual geometry must lower to ONE 3-stage
+# fused pass at the default budget (the ROADMAP capability), fp32 AND bf16.
+V2_GOLDEN = [
+    # (h, c_in, expand, c_out, stride)
+    (112, 16, 6, 24, 2),
+    (56, 24, 6, 32, 2),
+    (28, 32, 6, 64, 2),
+    (14, 64, 6, 96, 1),
+    (7, 160, 6, 320, 1),
+]
+
+
+@pytest.mark.parametrize("h,ci,ex,co,stride", V2_GOLDEN)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_plan_golden_v2_single_fused3_pass(h, ci, ex, co, stride, dtype):
+    spec = chain.inverted_residual_spec(ci, co, expand=ex, stride=stride)
+    cp = chain.plan(spec, (1, h, h, ci), dtype=dtype)
+    assert _kinds(cp) == ["fused3"], cp
+    assert cp.fully_fused
+    seg = cp.segments[0]
+    assert seg.stages == (0, 1, 2)
+    assert seg.plan.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+    # residual exactly when the V2 rule allows it, always folded in-kernel
+    expect_res = stride == 1 and ci == co
+    assert cp.residual == expect_res
+    assert cp.residual_fused == expect_res
+
+
+def test_plan_golden_v1_single_fused2_pass():
+    spec = chain.separable_block_spec(64, stride=1)
+    cp = chain.plan(spec, (1, 112, 112, 32))
+    assert _kinds(cp) == ["fused2"]
+    assert cp.fully_fused and not cp.residual
+
+
+def test_plan_golden_budget_degradation_ladder():
+    """The acceptance fallback: 3-fused -> (expand + 2-fused) -> unfused as
+    the budget shrinks; the residual stays kernel-folded until the last
+    segment is no longer fused."""
+    spec = chain.inverted_residual_spec(16, 16, expand=6, stride=1)
+    shape = (1, 12, 12, 16)
+
+    cp = chain.plan(spec, shape)
+    assert _kinds(cp) == ["fused3"] and cp.residual_fused
+
+    cp2 = chain.plan(spec, shape,
+                     policy=KernelPolicy(vmem_budget=3 * 1024))
+    assert _kinds(cp2) == ["pw", "fused2"] and cp2.residual_fused
+
+    cp1 = chain.plan(spec, shape, policy=KernelPolicy(vmem_budget=64))
+    assert _kinds(cp1) == ["pw", "dw", "pw"]
+    assert cp1.residual and not cp1.residual_fused
+    assert cp1.n_kernel_passes == 4  # 3 stages + separate residual add
+
+
+def test_plan_biased_expansion_blocks_3stage_fusion():
+    """A biased expansion cannot commute with zero SAME padding, so the
+    planner must degrade it to expand + 2-stage (kernels/separable_fused.py
+    restriction)."""
+    spec = chain.SeparableSpec(stages=(
+        chain.PW(96, activation="relu6", bias=True),
+        chain.DW(stride=1, activation="relu6"),
+        chain.PW(24),
+    ))
+    cp = chain.plan(spec, (1, 14, 14, 16))
+    assert _kinds(cp) == ["pw", "fused2"]
+
+
+def test_plan_legacy_fused_false_forces_unfused():
+    spec = chain.inverted_residual_spec(16, 16, expand=6)
+    cp = chain.plan(spec, (1, 12, 12, 16), policy=KernelPolicy(fused=False))
+    assert _kinds(cp) == ["pw", "dw", "pw"]
+
+
+def test_plan_bf16_budgets_differ_from_fp32():
+    """dtype reaches the chain budget: bf16 streams cost half, so the
+    planned blocks can grow (and never shrink) vs fp32 at equal budget."""
+    spec = chain.inverted_residual_spec(32, 32, expand=6)
+    budget = 96 * 1024
+    p32 = chain.plan(spec, (1, 56, 56, 32),
+                     policy=KernelPolicy(vmem_budget=budget))
+    p16 = chain.plan(spec, (1, 56, 56, 32), dtype=jnp.bfloat16,
+                     policy=KernelPolicy(vmem_budget=budget))
+    assert p32.dtype_bytes == 4 and p16.dtype_bytes == 2
+    assert len(p16.segments) <= len(p32.segments)
+    if _kinds(p16) == _kinds(p32) == ["fused3"]:
+        assert p16.segments[0].plan.slab_h >= p32.segments[0].plan.slab_h
+
+
+def test_chain_plan_is_hashable_and_comparable():
+    """The autotuning requirement: a ChainPlan is a frozen, hashable,
+    comparable unit — same spec+shape+dtype plans equal, others differ."""
+    spec = chain.inverted_residual_spec(16, 24, expand=4, stride=2)
+    a = chain.plan(spec, (1, 28, 28, 16))
+    b = chain.plan(spec, (1, 28, 28, 16))
+    c = chain.plan(spec, (1, 112, 112, 16))
+    assert a == b and hash(a) == hash(b)
+    assert a != c
+    assert {a, b, c} == {a, c}
+
+
+# ---------------------------------------------------------------------------
+# 3-stage fused vs unfused-composition parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("residual", [False, True])
+def test_fused3_matches_unfused_composition(stride, dtype, residual):
+    """Acceptance gate: the single-pass expand->DW->project kernel matches
+    the fully unfused XLA oracle chain (fp32 tight, bf16 within rounding —
+    the unfused chain rounds BOTH intermediates to bf16, the fused pass
+    keeps them fp32)."""
+    ci = 16
+    co = ci if residual else 40
+    stride = 1 if residual else stride  # residual requires stride 1
+    spec = chain.inverted_residual_spec(ci, co, expand=4, stride=stride)
+    params = chain.init_chain(jax.random.PRNGKey(42), spec, ci)
+    if dtype != np.float32:
+        params = jax.tree_util.tree_map(lambda a: a.astype(dtype), params)
+    x = _arr((2, 13, 13, ci)).astype(dtype)
+
+    cp = chain.plan(spec, x.shape, dtype=x.dtype)
+    assert _kinds(cp) == ["fused3"]
+    got = chain.execute(spec, params, x,
+                        policy=KernelPolicy(impl="pallas", interpret=True),
+                        chain_plan=cp)
+
+    # unfused oracle composition (per-stage XLA refs, natural rounding)
+    y = ref.pwconv_ref(x, params[0]["w"], activation="relu6")
+    y = ref.dwconv2d_ref(y, params[1]["f"], stride=stride, padding="same")
+    y = jnp.clip(y, 0.0, 6.0)
+    y = ref.pwconv_ref(y, params[2]["w"])
+    if cp.residual:
+        y = y + x
+    tol = 1e-4 if dtype == np.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(y, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fused3_parity_across_degradation_ladder():
+    """Every rung of the fallback ladder computes the same block (fp32)."""
+    spec = chain.inverted_residual_spec(16, 16, expand=6, stride=1)
+    params = chain.init_chain(jax.random.PRNGKey(5), spec, 16)
+    x = _arr((1, 12, 12, 16))
+    outs = []
+    for budget in (blocking.DEFAULT_VMEM_BUDGET, 3 * 1024, 64):
+        pol = KernelPolicy(impl="pallas", interpret=True,
+                           vmem_budget=budget)
+        outs.append(np.asarray(chain.execute(spec, params, x, policy=pol)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-4)
+
+
+def test_ops_separable_fused_expand_entry():
+    """The kernel-level wrapper (ops.separable_fused(expand_w=...)) matches
+    its oracle, including the plan3-infeasible degrade path."""
+    from repro.kernels import ops
+
+    x = _arr((1, 10, 10, 12))
+    ew = _arr((12, 48), scale=12 ** -0.5)
+    f = _arr((3, 3, 48), scale=1 / 3)
+    w = _arr((48, 20), scale=48 ** -0.5)
+    want = ref.separable_fused_ref(
+        x, f, w, expand_w=ew, stride=1, padding="same",
+        dw_activation="relu6", activation=None)
+    got = ops.separable_fused(
+        x, f, w, expand_w=ew, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # budget that kills plan3 but allows the 2-stage tail
+    got_deg = ops.separable_fused(
+        x, f, w, expand_w=ew, stride=1, padding="same",
+        dw_activation="relu6", activation=None,
+        impl="pallas", interpret=True, vmem_budget=6 * 1024)
+    np.testing.assert_allclose(np.asarray(got_deg), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence: legacy entry points == the chain API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_separable_block_shim_equivalence(stride):
+    """Old separable_block call == explicit spec->plan->execute, bitwise
+    (same code path), on both backends."""
+    params = init_separable(jax.random.PRNGKey(0), 16, 24)
+    x = _arr((1, 14, 14, 16))
+    spec = chain.separable_block_spec(24, stride=stride)
+    stage_params = (
+        {"f": params["dw_filter"], "b": params["dw_bias"]},
+        {"w": params["pw_weight"], "b": params["pw_bias"]},
+    )
+    for pol in (KernelPolicy(impl="xla"),
+                KernelPolicy(impl="pallas", interpret=True)):
+        old = separable_block(params, x, stride=stride, policy=pol)
+        new = chain.execute(spec, stage_params, x, policy=pol)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+@pytest.mark.parametrize("stride,c_in,c_out", [(1, 8, 8), (2, 8, 16)])
+def test_inverted_residual_shim_equivalence(stride, c_in, c_out):
+    params = init_inverted_residual(jax.random.PRNGKey(1), c_in, c_out,
+                                    expand=4)
+    x = _arr((1, 10, 10, c_in))
+    spec = chain.inverted_residual_spec(c_in, c_out, expand=4, stride=stride)
+    stage_params = ({"w": params["expand_w"]}, {"f": params["dw_filter"]},
+                    {"w": params["project_w"]})
+    for pol in (KernelPolicy(impl="xla"),
+                KernelPolicy(impl="pallas", interpret=True)):
+        old = inverted_residual(params, x, stride=stride, policy=pol)
+        new = chain.execute(spec, stage_params, x, policy=pol)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_inverted_residual_now_single_pass():
+    """The ROADMAP capability through the legacy shim: a V2 block's plan is
+    ONE fused3 kernel pass with the residual folded in."""
+    spec = chain.inverted_residual_spec(32, 32, expand=6, stride=1)
+    cp = chain.plan(spec, (1, 14, 14, 32))
+    assert cp.fully_fused and cp.n_kernel_passes == 1
+
+
+# ---------------------------------------------------------------------------
+# ChainPlan traffic model (core/intensity.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,ci,ex,co,stride", V2_GOLDEN)
+def test_fused3_traffic_strictly_below_2stage_and_unfused(h, ci, ex, co,
+                                                          stride):
+    """Acceptance gate: the 3-stage fused chain's modeled HBM bytes are
+    STRICTLY below the PR-2 two-stage lowering (standalone expand + fused
+    DW->PW), which is strictly below fully unfused — at every MobileNetV2
+    block geometry, fp32 and bf16."""
+    c = ci * ex
+    ho = -(-h // stride)
+    hi = (ho - 1) * stride + 3
+    for nb in (4, 2):
+        p3 = blocking.plan_separable3(ho, ho, ci, c, co, stride=stride)
+        p2 = blocking.plan_separable(ho, ho, c, co, stride=stride)
+        assert p3 is not None and p2 is not None
+        t3 = it.separable_traffic_fused3(
+            1, hi, hi, ci, c, co, 3, 3, stride,
+            block_co=p3.block_co, slab_h=p3.slab_h, dtype_bytes=nb)
+        t2 = it.separable_traffic_2stage(
+            1, h, h, ci, c, co, 3, 3, stride,
+            block_co=p2.block_co, slab_h=p2.slab_h, dtype_bytes=nb)
+        tu = it.separable_traffic_unfused3(1, h, h, ci, c, co, 3, 3, stride,
+                                           dtype_bytes=nb)
+        assert t3.bytes_hbm < t2.bytes_hbm < tu.bytes_hbm, (h, ci, co, nb)
+        assert t3.intensity > t2.intensity
+
+
+def test_chain_traffic_matches_segment_model():
+    """chain_traffic over a planned V2 block equals the fused3 model term
+    plus one streamed read of the folded residual operand."""
+    spec = chain.inverted_residual_spec(32, 32, expand=6)
+    shape = (1, 14, 14, 32)
+    cp = chain.plan(spec, shape)
+    assert _kinds(cp) == ["fused3"] and cp.residual_fused
+    t = chain.chain_traffic(spec, cp, shape)
+    seg = cp.segments[0]
+    want = it.separable_traffic_fused3(
+        1, 16, 16, 32, 192, 32, 3, 3, 1,
+        block_co=seg.plan.block_co, slab_h=seg.plan.slab_h)
+    res_read = 4 * 1 * 14 * 14 * 32
+    assert t.flops == want.flops + 1 * 14 * 14 * 32
+    assert t.bytes_hbm == want.bytes_hbm + res_read
+
+
+def test_plan_residual_requires_spatial_preservation():
+    """A valid-padded DW shrinks the spatial dims even at stride 1: the
+    auto residual must deactivate, and an explicit residual=True must be
+    rejected at plan time."""
+    auto = chain.SeparableSpec(stages=(
+        chain.DW(stride=1, padding="valid"), chain.PW(16)),
+        residual="auto")
+    cp = chain.plan(auto, (1, 12, 12, 16))
+    assert not cp.residual
+    forced = chain.SeparableSpec(stages=(
+        chain.DW(stride=1, padding="valid"), chain.PW(16)),
+        residual=True)
+    with pytest.raises(ValueError):
+        chain.plan(forced, (1, 12, 12, 16))
+
+
+def test_chain_traffic_unfused_residual_counts_separate_add():
+    spec = chain.inverted_residual_spec(16, 16, expand=6)
+    shape = (1, 12, 12, 16)
+    pol = KernelPolicy(fused=False)
+    cp = chain.plan(spec, shape, policy=pol)
+    assert cp.residual and not cp.residual_fused
+    t = chain.chain_traffic(spec, cp, shape)
+    cp_f = chain.plan(spec, shape)
+    t_f = chain.chain_traffic(spec, cp_f, shape)
+    assert t.bytes_hbm > t_f.bytes_hbm  # unfused + residual add cost more
+
+
+# ---------------------------------------------------------------------------
+# plan_separable3 planner unit behavior
+# ---------------------------------------------------------------------------
+
+def test_plan_separable3_budget_and_none():
+    p = blocking.plan_separable3(112, 112, 16, 96, 24, stride=1)
+    assert p is not None
+    assert p.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+    assert p.block_co == 24  # single Co panel preferred
+    # nothing fits an absurd budget
+    assert blocking.plan_separable3(12, 12, 16, 96, 24,
+                                    vmem_budget=64) is None
+
+
+def test_plan_separable3_slabs_at_hires():
+    """The expanded fp32 intermediate dominates: high resolutions must slab
+    (and still fit the budget) rather than return None."""
+    p = blocking.plan_separable3(1504, 1504, 16, 96, 32)
+    assert p is not None and p.n_slabs > 1
+    assert p.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+
+
+def test_fused3_vmem_bytes_exceeds_fused2_at_equal_blocks():
+    """The 3-stage working set adds the raw-input window, expand-weight
+    tile and expanded value on top of the 2-stage claim."""
+    b3 = blocking.fused3_vmem_bytes(112, 8, 16, 32, 64)
+    b2 = blocking.fused_vmem_bytes(112, 8, 32, 64)
+    assert b3 > b2
