@@ -1,0 +1,105 @@
+"""Analytic-vs-measured ChainPlan table (kernels/autotune.py).
+
+For each MobileNetV2 inverted-residual block this tunes the whole chain
+with the measured autotuner and reports, side by side, the analytic
+planner's blocking and the measured winner, the timings that decided it,
+and whether the persistent cache answered (``cache=hit`` rows did ZERO
+measurement — that is the CI replay gate).
+
+Quick mode (the default) runs tiny-resolution stand-ins for the V2
+geometries so interpret-mode Pallas measurement stays in CI seconds;
+``--full`` tunes the real ``MOBILENET_V2_IR`` shapes (use on TPU, where
+the compiled kernels make measurement meaningful AND fast).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.layers import MOBILENET_V2_IR, IRBlock
+from repro.core import chain
+from repro.kernels import autotune
+from repro.kernels.policy import KernelPolicy
+
+# Tiny stand-ins for the V2 stages: same stride/residual structure, small
+# enough that interpret-mode measurement of the whole candidate ladder is
+# a few seconds per block on CPU.
+AUTOTUNE_QUICK = [
+    IRBlock("V2-IR1q", 16, 8, 4, 8, 2),
+    IRBlock("V2-IR4q", 8, 8, 4, 16, 1),
+    IRBlock("V2-IR7q", 8, 8, 4, 8, 1),   # residual case (c_in == c_out)
+]
+
+
+def _blocks_str(cp) -> str:
+    """Compact per-segment blocking description for the CSV column."""
+    out = []
+    for seg in cp.segments:
+        p = seg.plan
+        if seg.kind in ("fused3", "fused2"):
+            out.append(f"{seg.kind}:co{p.block_co}xslab{p.slab_h}")
+        elif seg.kind == "pw":
+            out.append(f"pw:g{p.block_g}")
+        else:
+            out.append(f"dw:c{p.block_c}")
+    return "+".join(out)
+
+
+def _tune_policy(cache_path: Optional[str]) -> KernelPolicy:
+    """Measured tuning wants the real kernels: compiled Pallas on TPU,
+    interpret-mode Pallas elsewhere (slow but faithful to the blocking)."""
+    on_tpu = jax.default_backend() == "tpu"
+    return KernelPolicy(impl="pallas", interpret=not on_tpu,
+                        autotune=True, tune_cache=cache_path)
+
+
+def autotune_rows(cache_path: Optional[str] = None, *,
+                  full: bool = False) -> tuple[list[str], list[dict]]:
+    """Tune each block, returning (csv_rows, result_records).
+
+    Row format::
+
+        autotune/mobilenet_v2/<name>,<measured_us>,cache=miss|hit;
+            analytic=<blocks>;measured=<blocks>;analytic_us=<us>;n_cand=N
+    """
+    blocks = MOBILENET_V2_IR if full else AUTOTUNE_QUICK
+    policy = _tune_policy(cache_path)
+    rng = np.random.default_rng(0)
+    rows, records = [], []
+    for blk in blocks:
+        spec = chain.inverted_residual_spec(
+            blk.c_in, blk.c_out, expand=blk.expand, stride=blk.stride,
+            hf=blk.hf)
+        params = chain.init_chain(jax.random.PRNGKey(0), spec, blk.c_in)
+        x = jnp.asarray(rng.normal(
+            size=(1, blk.h, blk.h, blk.c_in)).astype(np.float32))
+        base = chain.plan(spec, x.shape, dtype=x.dtype,
+                          policy=dataclasses.replace(policy, autotune=False))
+        res = autotune.autotune_chain(spec, params, x, policy=policy,
+                                      base_plan=base)
+        rec = {
+            "name": blk.name,
+            "cache": "hit" if res.cache_hit else "miss",
+            "analytic_blocks": _blocks_str(base),
+            "measured_blocks": _blocks_str(res.plan),
+            "measured_us": res.measured_us,
+            "analytic_us": res.analytic_us,
+            "n_measured": res.n_measured,
+            "key": res.key,
+        }
+        records.append(rec)
+        rows.append(
+            f"autotune/mobilenet_v2/{blk.name},{res.measured_us:.1f},"
+            f"cache={rec['cache']};analytic={rec['analytic_blocks']};"
+            f"measured={rec['measured_blocks']};"
+            f"analytic_us={res.analytic_us:.1f};n_cand={res.n_measured}")
+    return rows, records
+
+
+if __name__ == "__main__":
+    for row in autotune_rows()[0]:
+        print(row)

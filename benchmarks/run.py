@@ -17,6 +17,18 @@ Flags:
   regression gate.
 * ``--out PATH`` — additionally dump the raw results dict as JSON to PATH
   (e.g. ``artifacts/bench_results.json``). Without it nothing is written.
+* ``--autotune`` — append the analytic-vs-measured ChainPlan table
+  (``autotune/mobilenet_v2/...`` rows, benchmarks/autotune_table.py): each
+  V2 inverted residual is tuned with the measured autotuner and the row
+  reports cache=miss|hit, both blockings and both timings. Unlike the
+  other sections this MEASURES even under ``--dry-run`` (measurement is
+  the feature under test); quick mode uses tiny stand-in geometries so the
+  interpret-mode ladder stays in CI seconds, ``--full`` tunes the real V2
+  shapes.
+* ``--tune-cache PATH`` — persistent tune-cache JSON for ``--autotune``
+  (default: $REPRO_TUNE_CACHE or ~/.cache/repro/autotune.json). Re-running
+  with the same PATH must print every row as cache=hit with n_cand=0 —
+  CI's replay gate.
 """
 from __future__ import annotations
 
@@ -37,6 +49,10 @@ def main() -> None:
                     help="model-only: no compilation or timing")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write raw results JSON to PATH")
+    ap.add_argument("--autotune", action="store_true",
+                    help="append the analytic-vs-measured ChainPlan table")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="tune-cache JSON for --autotune")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import run_all
@@ -98,6 +114,13 @@ def main() -> None:
 
     from benchmarks.kernel_vmem import csv_rows as vmem_rows
     rows.extend(vmem_rows())
+
+    if args.autotune:
+        from benchmarks.autotune_table import autotune_rows
+        tune_rows, tune_recs = autotune_rows(args.tune_cache,
+                                             full=args.full)
+        rows.extend(tune_rows)
+        results["autotune"] = tune_recs
 
     recs = load_records()
     rows.extend(csv_rows(recs))

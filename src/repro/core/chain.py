@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intensity as it
-from repro.kernels import blocking, lowering
+from repro.kernels import autotune, blocking, lowering
 from repro.kernels.blocking import ChainPlan, ChainSegment
 from repro.kernels.epilogue import ACTIVATIONS
 from repro.kernels.policy import DEFAULT_POLICY, KernelPolicy
@@ -198,7 +198,17 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     kernel when that segment is fused (the kernels' residual operand);
     otherwise it lowers to a separate add.  Deterministic, shape-only
     arithmetic — the returned ChainPlan is a cacheable, comparable unit.
+
+    With ``policy.autotune`` the persistent tune cache
+    (``kernels/autotune.py``) is consulted first and a measured winner for
+    this exact problem signature wins over the analytic walk; on a cache
+    miss this function still answers analytically (measurement needs data
+    and happens in :func:`execute`).
     """
+    if policy.autotune:
+        cached = autotune.lookup_cached_plan(spec, x_shape, dtype, policy)
+        if cached is not None:
+            return cached
     b, h, w, c = x_shape
     stages = spec.stages
     n = len(stages)
@@ -286,9 +296,23 @@ lower = lowering.lower
 def execute(spec: SeparableSpec, params: Sequence[dict], x: jax.Array, *,
             policy: KernelPolicy = DEFAULT_POLICY,
             chain_plan: Optional[ChainPlan] = None) -> jax.Array:
-    """Run the chain: plan (unless given), lower, execute."""
+    """Run the chain: plan (unless given), lower, execute.
+
+    With ``policy.autotune`` the plan is the MEASURED winner from
+    ``kernels/autotune.py``: the first call for a given problem signature
+    times the candidate ladder and persists the winner; every later call
+    (including in other processes) replays the cached plan with zero
+    re-measurement.  Cache miss with tuning disabled — or tuning disabled
+    outright — falls back to the analytic planner.
+    """
     if chain_plan is None:
-        chain_plan = plan(spec, x.shape, dtype=x.dtype, policy=policy)
+        if policy.autotune:
+            base = plan(spec, x.shape, dtype=x.dtype,
+                        policy=dataclasses.replace(policy, autotune=False))
+            chain_plan = autotune.autotune_chain(
+                spec, params, x, policy=policy, base_plan=base).plan
+        else:
+            chain_plan = plan(spec, x.shape, dtype=x.dtype, policy=policy)
     return lower(spec, chain_plan, policy)(params, x)
 
 
@@ -301,9 +325,12 @@ def chain_traffic(spec: SeparableSpec, chain_plan: ChainPlan,
                   dtype_bytes: Optional[int] = None) -> "it.Traffic":
     """Modeled HBM traffic + FLOPs of the planned chain: the sum of each
     segment's kernel-level model (``core/intensity.py``), plus the separate
-    residual add when it is not folded into a fused pass.  This is the
-    table the benchmark gate prints per block (3-stage fused vs 2-stage
-    fused vs unfused)."""
+    residual add when it is not folded into a fused pass, plus the
+    standalone-DW bias/activation epilogue (``apply_epilogue`` in
+    ``kernels/lowering.py`` is a separate elementwise op that reads and
+    re-writes the whole ``(B,Ho,Wo,C)`` tensor — fused segments apply it
+    inside the kernel for free).  This is the table the benchmark gate
+    prints per block (3-stage fused vs 2-stage fused vs unfused)."""
     nb = dtype_bytes or chain_plan.dtype_bytes
     b, h, w, c = x_shape
     stages = spec.stages
@@ -344,6 +371,14 @@ def chain_traffic(spec: SeparableSpec, chain_plan: ChainPlan,
             wi_v = (wo - 1) * st.stride + st.wf
             t = it.dwconv2d_traffic(b, hi_v, wi_v, c, st.hf, st.wf,
                                     st.stride, dtype_bytes=nb)
+            if st.bias or st.activation is not None:
+                # standalone-DW epilogue: a separate elementwise op in the
+                # lowering that re-reads and re-writes the whole output
+                # tensor (+ the bias vector); XLA elides it when there is
+                # neither bias nor activation, so only count it then
+                epi = nb * (2 * b * ho * wo * c + (c if st.bias else 0))
+                t = it.Traffic(t.flops + b * ho * wo * c,
+                               t.bytes_hbm + epi)
             h, w = ho, wo
         flops += t.flops
         bytes_ += t.bytes_hbm

@@ -1,0 +1,449 @@
+"""Measured ChainPlan autotuner with a persistent on-disk cache (DESIGN §6).
+
+The analytic planner (``core/chain.plan`` -> ``kernels/blocking.py``) picks
+block shapes by VMEM arithmetic alone.  That is the right *feasibility*
+filter, but on real hardware the fastest feasible blocking is not always
+the first one the preference ladder hits — TVM (the paper's baseline) and
+the ARMv8 DWConv follow-up both close that gap with a measurement loop over
+a pruned candidate set.  This module is that loop for declared separable
+chains:
+
+* **candidate ladder** — per chain segment, enumerate a handful of feasible
+  ``BlockPlan``s from the SAME ladders the analytic planner walks
+  (``co_candidates`` x ``slab_candidates`` probed via
+  ``plan_separable_at``/``plan_separable3_at``, the ``PW_G_CANDIDATES``
+  GEMM panel ladder, ``snap_channels`` channel blocks), capped at
+  :data:`MAX_SEGMENT_CANDIDATES` per segment;
+* **timing harness** — each candidate ``ChainPlan`` is lowered
+  (``kernels/lowering.lower`` — which executes plans verbatim, never
+  re-plans) and timed jitted with ``block_until_ready``: warmup runs to
+  absorb compilation, then median-of-k repeats.  Works on the Pallas
+  interpret path in a CPU container and on compiled Pallas on real TPU;
+* **persistent cache** — winners are stored in a JSON file keyed on the
+  serialized problem signature (spec stages + input shape/dtype + VMEM
+  budget + backend fingerprint), so repeated runs — and repeated identical
+  layers within a run — replay cache hits with zero re-measurement.  A
+  corrupted cache file is treated as empty (recoverable), never a crash.
+
+A candidate only dethrones the incumbent when it wins by more than
+:data:`REL_IMPROVEMENT` — on backends where block shapes cannot change the
+wall time (the XLA reference path) the analytic plan therefore stays the
+winner, and measured noise cannot flip plans between runs.
+
+Entry points: ``core/chain.execute(policy=KernelPolicy(autotune=True))``
+measures on the first call and replays the cache afterwards;
+``core/chain.plan`` consults :func:`lookup_cached_plan`;
+``benchmarks/run.py --autotune`` prints the analytic-vs-measured table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import statistics
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blocking, lowering
+from repro.kernels.blocking import BlockPlan, ChainPlan, ChainSegment
+from repro.kernels.policy import KernelPolicy
+
+#: Cache-file schema version; bump on incompatible layout changes (old
+#: files then read as empty and re-tune, they are never mis-parsed).
+CACHE_VERSION = 1
+
+#: Feasible candidates measured per chain segment (incl. the analytic plan).
+MAX_SEGMENT_CANDIDATES = 8
+
+#: A candidate must beat the incumbent by this relative margin to win —
+#: keeps plan churn at measurement-noise level (and keeps the analytic plan
+#: the winner on backends where blocks cannot change the wall time).
+REL_IMPROVEMENT = 0.02
+
+
+def default_cache_path() -> str:
+    """$REPRO_TUNE_CACHE, else ~/.cache/repro/autotune.json."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+# ---------------------------------------------------------------------------
+# Problem signature: the cache key schema (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _stage_signature(s) -> dict:
+    """Duck-typed stage descriptor (PW has ``features``; DW has ``stride``),
+    mirroring kernels/lowering.py's duck-typing so this module needs no
+    import of core/chain."""
+    if hasattr(s, "features"):
+        return {"kind": "pw", "features": int(s.features),
+                "activation": s.activation, "bias": bool(s.bias)}
+    return {"kind": "dw", "stride": int(s.stride), "hf": int(s.hf),
+            "wf": int(s.wf), "padding": s.padding.lower(),
+            "activation": s.activation, "bias": bool(s.bias)}
+
+
+def backend_fingerprint(policy: KernelPolicy) -> dict:
+    """What makes a measurement transferable: same resolved impl, interpret
+    mode, jax backend and device kind (a v5e winner must not replay on a
+    v4, nor an interpret-mode winner on compiled Pallas)."""
+    dev = jax.devices()[0]
+    return {
+        "impl": policy.resolved(),
+        "interpret": bool(policy.interpret),
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "jax": jax.__version__,
+    }
+
+
+def problem_signature(spec, x_shape: Sequence[int], dtype,
+                      policy: KernelPolicy) -> dict:
+    """The full serialized problem identity a measurement is valid for."""
+    residual = spec.residual
+    return {
+        "stages": [_stage_signature(s) for s in spec.stages],
+        "residual": residual if isinstance(residual, bool) else str(residual),
+        "x_shape": [int(v) for v in x_shape],
+        "dtype": jnp.dtype(dtype).name,
+        "vmem_budget": int(policy.vmem_budget),
+        "backend": backend_fingerprint(policy),
+    }
+
+
+def problem_key(spec, x_shape: Sequence[int], dtype,
+                policy: KernelPolicy) -> str:
+    """Stable digest of :func:`problem_signature` — the cache key."""
+    blob = json.dumps(problem_signature(spec, x_shape, dtype, policy),
+                      sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:20]
+
+
+# ---------------------------------------------------------------------------
+# ChainPlan (de)serialization
+# ---------------------------------------------------------------------------
+
+def serialize_chain_plan(cp: ChainPlan) -> dict:
+    return {
+        "segments": [
+            {"kind": s.kind, "stages": list(s.stages),
+             "plan": dataclasses.asdict(s.plan)}
+            for s in cp.segments],
+        "residual": bool(cp.residual),
+        "residual_fused": bool(cp.residual_fused),
+        "dtype_bytes": int(cp.dtype_bytes),
+        "vmem_budget": int(cp.vmem_budget),
+    }
+
+
+def deserialize_chain_plan(d: dict) -> ChainPlan:
+    segments = tuple(
+        ChainSegment(kind=s["kind"], stages=tuple(int(i) for i in s["stages"]),
+                     plan=BlockPlan(**{k: int(v)
+                                       for k, v in s["plan"].items()}))
+        for s in d["segments"])
+    return ChainPlan(
+        segments=segments,
+        residual=bool(d["residual"]),
+        residual_fused=bool(d["residual_fused"]),
+        dtype_bytes=int(d["dtype_bytes"]),
+        vmem_budget=int(d["vmem_budget"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+class TuneCache:
+    """JSON-file-backed map ``key -> {signature, plan, measured_us, ...}``.
+
+    Load tolerates a missing, unreadable or corrupted file (the cache is a
+    performance artifact, never a correctness dependency): any parse
+    failure yields an EMPTY cache whose next ``save`` rewrites the file.
+    ``save`` is atomic (tmp file + ``os.replace``) so a crashed writer
+    cannot corrupt a reader."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.entries: dict = {}
+
+    @classmethod
+    def load(cls, path: str) -> "TuneCache":
+        cache = cls(path)
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            if (isinstance(raw, dict) and raw.get("version") == CACHE_VERSION
+                    and isinstance(raw.get("entries"), dict)):
+                cache.entries = raw["entries"]
+        except FileNotFoundError:
+            pass
+        except (OSError, ValueError):
+            pass  # corrupted / unreadable -> recover as empty
+        return cache
+
+    def get(self, key: str) -> Optional[dict]:
+        entry = self.entries.get(key)
+        return entry if isinstance(entry, dict) else None
+
+    def put(self, key: str, entry: dict) -> None:
+        self.entries[key] = entry
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": self.entries},
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+def lookup_cached_plan(spec, x_shape: Sequence[int], dtype,
+                       policy: KernelPolicy) -> Optional[ChainPlan]:
+    """Pure cache consult (no measurement): the tuned ChainPlan for this
+    problem signature, or None on a miss / undecodable entry."""
+    path = policy.tune_cache or default_cache_path()
+    entry = TuneCache.load(path).get(problem_key(spec, x_shape, dtype,
+                                                 policy))
+    if entry is None:
+        return None
+    try:
+        return deserialize_chain_plan(entry["plan"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration (the pruned ladder the tuner measures)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _SegGeom:
+    """Shapes a segment's kernel sees — what candidate feasibility needs."""
+    kind: str
+    ho: int
+    wo: int
+    ci: int        # segment input channels (raw input for fused3)
+    c: int         # DW / expanded width (fused segments)
+    co: int        # output channels
+    stride: int
+    hf: int
+    wf: int
+    g: int         # GEMM rows (pw only)
+    residual: bool  # the folded residual rides this segment's kernel
+
+
+def _segment_geoms(stages, cp: ChainPlan,
+                   x_shape: Sequence[int]) -> list[_SegGeom]:
+    """Walk the chain shapes segment by segment (same walk as
+    ``core/chain.chain_traffic``, duck-typed on the stage objects)."""
+    b, h, w, c = (int(v) for v in x_shape)
+    geoms = []
+    for si, seg in enumerate(cp.segments):
+        with_res = bool(cp.residual_fused and si == len(cp.segments) - 1)
+        if seg.kind == "fused3":
+            ex, d, proj = (stages[i] for i in seg.stages)
+            ho, wo = d.out_dims(h, w)
+            geoms.append(_SegGeom("fused3", ho, wo, c, ex.features,
+                                  proj.features, d.stride, d.hf, d.wf, 0,
+                                  with_res))
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "fused2":
+            d, proj = (stages[i] for i in seg.stages)
+            ho, wo = d.out_dims(h, w)
+            geoms.append(_SegGeom("fused2", ho, wo, c, c, proj.features,
+                                  d.stride, d.hf, d.wf, 0, with_res))
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "pw":
+            st = stages[seg.stages[0]]
+            geoms.append(_SegGeom("pw", h, w, c, 0, st.features, 1, 0, 0,
+                                  b * h * w, False))
+            c = st.features
+        else:  # "dw"
+            st = stages[seg.stages[0]]
+            ho, wo = st.out_dims(h, w)
+            geoms.append(_SegGeom("dw", ho, wo, c, c, c, st.stride, st.hf,
+                                  st.wf, 0, False))
+            h, w = ho, wo
+    return geoms
+
+
+def segment_candidates(geom: _SegGeom, base: BlockPlan, dtype,
+                       vmem_budget: int,
+                       max_candidates: int = MAX_SEGMENT_CANDIDATES,
+                       ) -> list[BlockPlan]:
+    """Up to ``max_candidates`` feasible BlockPlans for one segment, the
+    analytic plan first.  Fused segments sweep the (Co panel x row slab)
+    grid the analytic ladder prefers the corner of; pw sweeps the GEMM
+    G-panel ladder; dw sweeps snapped channel blocks."""
+    nb = blocking.dtype_bytes(dtype)
+    cands = [base]
+    if geom.kind in ("fused2", "fused3"):
+        probe = (blocking.plan_separable3_at if geom.kind == "fused3"
+                 else blocking.plan_separable_at)
+        for cob in blocking.co_candidates(geom.co):
+            if len(cands) >= max_candidates:
+                break
+            for slab_h in blocking.slab_candidates(geom.ho):
+                if len(cands) >= max_candidates:
+                    break
+                if geom.kind == "fused3":
+                    p = probe(geom.ho, geom.wo, geom.ci, geom.c, geom.co,
+                              block_co=cob, slab_h=slab_h,
+                              stride=geom.stride, hf=geom.hf, wf=geom.wf,
+                              dtype=dtype, vmem_budget=vmem_budget,
+                              residual=geom.residual)
+                else:
+                    p = probe(geom.ho, geom.wo, geom.c, geom.co,
+                              block_co=cob, slab_h=slab_h,
+                              stride=geom.stride, hf=geom.hf, wf=geom.wf,
+                              dtype=dtype, vmem_budget=vmem_budget,
+                              residual=geom.residual)
+                if p is not None and p not in cands:
+                    cands.append(p)
+    elif geom.kind == "pw":
+        for bg in blocking.PW_G_CANDIDATES:
+            if len(cands) >= max_candidates:
+                break
+            vb = blocking.pwconv_vmem_bytes(bg, base.block_c, base.block_co,
+                                            nb)
+            if vb > vmem_budget:
+                continue
+            p = dataclasses.replace(base, block_g=bg, vmem_bytes=vb)
+            if p not in cands:
+                cands.append(p)
+    else:  # "dw"
+        hi = (geom.ho - 1) * geom.stride + geom.hf
+        wi = (geom.wo - 1) * geom.stride + geom.wf
+        for target in (geom.c, 1024, 512, 256, 128, 64, 32, 16, 8):
+            if len(cands) >= max_candidates:
+                break
+            cb = blocking.snap_channels(min(target, geom.c), geom.c)
+            vb = blocking.dwconv2d_vmem_bytes(hi, wi, geom.ho, geom.wo, cb,
+                                              geom.hf, geom.wf, nb)
+            if vb > vmem_budget:
+                continue
+            p = BlockPlan(block_c=cb, block_co=0, slab_h=geom.ho, n_slabs=1,
+                          halo_rows=0, vmem_bytes=vb, dtype_bytes=nb)
+            if p not in cands:
+                cands.append(p)
+    return cands[:max_candidates]
+
+
+def _with_segment_plan(cp: ChainPlan, si: int, plan: BlockPlan) -> ChainPlan:
+    segments = tuple(
+        dataclasses.replace(seg, plan=plan) if i == si else seg
+        for i, seg in enumerate(cp.segments))
+    return dataclasses.replace(cp, segments=segments)
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+
+def measure_run(run, params, x, *, warmup: int = 1,
+                repeats: int = 5) -> float:
+    """Median wall seconds of ``run(params, x)`` jitted: ``warmup`` calls
+    absorb compilation (and interpret-mode tracing), then median-of-k timed
+    calls, each synchronized with ``block_until_ready``."""
+    fn = jax.jit(run)
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(params, x))
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, x))
+        ts.append(time.perf_counter() - t0)
+    return float(statistics.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """What one autotune consult answered: the plan to execute, whether it
+    replayed the cache (``n_measured == 0`` then), and the timings behind
+    the decision (microseconds; on a hit, as recorded at tune time)."""
+    plan: ChainPlan
+    cache_hit: bool
+    measured_us: float
+    analytic_us: float
+    n_measured: int
+    key: str
+    cache_path: str
+
+
+def autotune_chain(spec, params, x, *, policy: KernelPolicy,
+                   base_plan: ChainPlan,
+                   warmup: int = 1, repeats: int = 5,
+                   max_candidates: int = MAX_SEGMENT_CANDIDATES,
+                   cache: Optional[TuneCache] = None) -> AutotuneResult:
+    """Measured plan selection for one declared chain at one input.
+
+    Cache hit: decode and return the stored winner — ZERO measurements.
+    Miss: time the analytic ``base_plan``, then coordinate-descend over the
+    per-segment candidate ladder (vary one segment, keep the others at the
+    incumbent) timing the WHOLE chain per candidate, persist the winner.
+    The analytic plan is always among the candidates, so the tuner can
+    never do worse than the planner it replaces (up to measurement noise,
+    bounded by :data:`REL_IMPROVEMENT`).
+    """
+    path = policy.tune_cache or default_cache_path()
+    if cache is None:
+        cache = TuneCache.load(path)
+    key = problem_key(spec, x.shape, x.dtype, policy)
+    entry = cache.get(key)
+    if entry is not None:
+        try:
+            plan = deserialize_chain_plan(entry["plan"])
+            return AutotuneResult(
+                plan=plan, cache_hit=True,
+                measured_us=float(entry.get("measured_us", 0.0)),
+                analytic_us=float(entry.get("analytic_us", 0.0)),
+                n_measured=0, key=key, cache_path=path)
+        except (KeyError, TypeError, ValueError):
+            pass  # undecodable entry -> re-tune and overwrite
+
+    def timed(cp: ChainPlan) -> float:
+        run = lowering.lower(spec, cp, policy)
+        return measure_run(run, params, x, warmup=warmup, repeats=repeats)
+
+    t_base = timed(base_plan)
+    best, t_best = base_plan, t_base
+    n_measured = 1
+    geoms = _segment_geoms(spec.stages, base_plan, x.shape)
+    for si, geom in enumerate(geoms):
+        for cand in segment_candidates(geom, best.segments[si].plan,
+                                       x.dtype, policy.vmem_budget,
+                                       max_candidates):
+            if cand == best.segments[si].plan:
+                continue
+            cp = _with_segment_plan(best, si, cand)
+            t = timed(cp)
+            n_measured += 1
+            if t < t_best * (1.0 - REL_IMPROVEMENT):
+                best, t_best = cp, t
+    cache.put(key, {
+        "signature": problem_signature(spec, x.shape, x.dtype, policy),
+        "plan": serialize_chain_plan(best),
+        "measured_us": t_best * 1e6,
+        "analytic_us": t_base * 1e6,
+        "n_measured": n_measured,
+    })
+    cache.save()
+    return AutotuneResult(plan=best, cache_hit=False,
+                          measured_us=t_best * 1e6,
+                          analytic_us=t_base * 1e6,
+                          n_measured=n_measured, key=key, cache_path=path)

@@ -212,6 +212,32 @@ def _fused_plan_at(ho: int, wo: int, c: int, slab_h: int, cob: int,
     return cb if cb >= min_cb else None
 
 
+def plan_separable_at(ho: int, wo: int, c: int, co: int, *,
+                      block_co: int, slab_h: int,
+                      stride: int = 1, hf: int = 3, wf: int = 3,
+                      dtype=jnp.float32,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                      residual: bool = False) -> Optional[BlockPlan]:
+    """Feasibility probe at an EXPLICIT ``(block_co, slab_h)`` point: the
+    largest channel block that fits the budget there, or None.  This is the
+    autotuner's candidate constructor (``kernels/autotune.py``) — the
+    analytic :func:`plan_separable` walks the same ladder but stops at the
+    first hit; the tuner instead measures several feasible points."""
+    nb = dtype_bytes(dtype)
+    cb = _fused_plan_at(ho, wo, c, slab_h, block_co, hf, wf, stride, nb,
+                        residual, vmem_budget, 1)
+    if cb is None:
+        return None
+    n_slabs = -(-ho // slab_h)
+    return BlockPlan(
+        block_c=cb, block_co=block_co, slab_h=slab_h, n_slabs=n_slabs,
+        halo_rows=max(hf - stride, 0) if n_slabs > 1 else 0,
+        vmem_bytes=fused_vmem_bytes(wo, slab_h, cb, block_co, hf, wf,
+                                    stride, nb, residual),
+        dtype_bytes=nb,
+    )
+
+
 def plan_separable(ho: int, wo: int, c: int, co: int, *,
                    stride: int = 1, hf: int = 3, wf: int = 3,
                    dtype=jnp.float32,
@@ -302,6 +328,29 @@ def _fused3_plan_at(c: int, ci: int, slab_h: int, cob: int, wo: int,
         return None
     cb = snap_channels(int(rem // per_c), c)
     return cb if cb >= min_cb else None
+
+
+def plan_separable3_at(ho: int, wo: int, ci: int, c: int, co: int, *,
+                       block_co: int, slab_h: int,
+                       stride: int = 1, hf: int = 3, wf: int = 3,
+                       dtype=jnp.float32,
+                       vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                       residual: bool = False) -> Optional[BlockPlan]:
+    """3-stage analogue of :func:`plan_separable_at`: feasibility probe for
+    the expand-on-the-fly kernel at an explicit ``(block_co, slab_h)``."""
+    nb = dtype_bytes(dtype)
+    cb = _fused3_plan_at(c, ci, slab_h, block_co, wo, hf, wf, stride, nb,
+                         residual, vmem_budget, 1)
+    if cb is None:
+        return None
+    n_slabs = -(-ho // slab_h)
+    return BlockPlan(
+        block_c=cb, block_co=block_co, slab_h=slab_h, n_slabs=n_slabs,
+        halo_rows=max(hf - stride, 0) if n_slabs > 1 else 0,
+        vmem_bytes=fused3_vmem_bytes(wo, slab_h, ci, cb, block_co, hf, wf,
+                                     stride, nb, residual),
+        dtype_bytes=nb,
+    )
 
 
 def plan_separable3(ho: int, wo: int, ci: int, c: int, co: int, *,
@@ -406,6 +455,10 @@ def pwconv_vmem_bytes(bg: int, bci: int, bco: int, itemsize: int = 4) -> int:
     return bg * bco * ACC_BYTES + 2 * (bg * bci + bci * bco) * itemsize
 
 
+#: G-panel ladder the GEMM planner walks (and the autotuner measures over).
+PW_G_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+
+
 def plan_pwconv(g: int, ci: int, co: int, *,
                 dtype=jnp.float32,
                 vmem_budget: int = DEFAULT_VMEM_BUDGET) -> BlockPlan:
@@ -415,7 +468,7 @@ def plan_pwconv(g: int, ci: int, co: int, *,
     so the same budget affords a 2x taller output panel)."""
     nb = dtype_bytes(dtype)
     bco = bci = 2 * LANES
-    for bg in (1024, 512, 256, 128, 64, 32, 16, 8):
+    for bg in PW_G_CANDIDATES:
         if pwconv_vmem_bytes(bg, bci, bco, nb) <= vmem_budget:
             break
     return BlockPlan(

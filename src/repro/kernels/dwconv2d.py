@@ -54,16 +54,22 @@ def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
     out_ref[0] = acc.astype(out_dtype)         # single store (lines 29-34)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret", "block_c"))
+@functools.partial(jax.jit, static_argnames=("stride", "interpret", "block_c",
+                                             "vmem_budget"))
 def dwconv2d_pallas(
     x: jax.Array,
     f: jax.Array,
     *,
     stride: int = 1,
     block_c: int | None = None,
+    vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
     interpret: bool = False,
 ) -> jax.Array:
-    """x: (B, Hi, Wi, C); f: (Hf, Wf, C) -> (B, Ho, Wo, C). VALID geometry."""
+    """x: (B, Hi, Wi, C); f: (Hf, Wf, C) -> (B, Ho, Wo, C). VALID geometry.
+
+    An explicit ``block_c`` (e.g. a ``ChainSegment.plan``'s or a measured
+    autotuner winner's) is executed verbatim; ``None`` re-plans at
+    ``vmem_budget``."""
     b, hi, wi, c = x.shape
     hf, wf, cf = f.shape
     assert c == cf, (x.shape, f.shape)
@@ -74,7 +80,8 @@ def dwconv2d_pallas(
     if block_c is None:
         # dtype-aware channel-block plan (kernels/blocking.py owns the math)
         block_c = blocking.plan_dwconv2d(
-            hi, wi, ho, wo, c, hf, wf, dtype=x.dtype).block_c
+            hi, wi, ho, wo, c, hf, wf, dtype=x.dtype,
+            vmem_budget=vmem_budget).block_c
     cb = block_c
     pad = (-c) % cb
     if pad:

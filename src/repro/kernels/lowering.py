@@ -111,13 +111,19 @@ def lower(spec, chain_plan: ChainPlan,
                     block_g=policy.block_g or seg.plan.block_g,
                     block_co=policy.block_co or seg.plan.block_co,
                     block_ci=policy.block_ci or seg.plan.block_c,
+                    vmem_budget=policy.vmem_budget,
                 )
             else:  # "dw"
                 st = stages[seg.stages[0]]
                 p = params[seg.stages[0]]
+                # execute the planned channel block verbatim — re-planning
+                # here would silently ignore policy.vmem_budget (and defeat
+                # measured autotuning, which keys on the plan it timed)
                 y = ops.dwconv2d(
                     y, p["f"], stride=st.stride, padding=st.padding,
                     impl=impl, interpret=interpret,
+                    block_c=seg.plan.block_c,
+                    vmem_budget=policy.vmem_budget,
                 )
                 y = apply_epilogue(y, p.get("b"), st.activation)
         if chain_plan.residual and not chain_plan.residual_fused:

@@ -57,8 +57,16 @@ def dwconv2d(
     padding: str = "same",
     impl: str = "auto",
     interpret: bool = False,
+    block_c: int | None = None,
+    vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
 ) -> jax.Array:
-    """Depthwise 2-D conv, NHWC. x (B,Hi,Wi,C), f (Hf,Wf,C)."""
+    """Depthwise 2-D conv, NHWC. x (B,Hi,Wi,C), f (Hf,Wf,C).
+
+    ``block_c`` executes the kernel at an explicit channel block (the chain
+    lowering passes its ``ChainSegment.plan`` here so a planned — or
+    measured — ``ChainPlan`` runs verbatim); ``None`` defers to the
+    dtype-aware planner at ``vmem_budget``.
+    """
     impl = _resolve(impl)
     if impl == "xla":
         return ref.dwconv2d_ref(x, f, stride=stride, padding=padding)
@@ -66,7 +74,8 @@ def dwconv2d(
         x = _pad_same(x, f.shape[0], f.shape[1], stride)
     elif padding.lower() != "valid":
         raise ValueError(padding)
-    return dwconv2d_pallas(x, f, stride=stride, interpret=interpret)
+    return dwconv2d_pallas(x, f, stride=stride, block_c=block_c,
+                           vmem_budget=vmem_budget, interpret=interpret)
 
 
 def dwconv1d_causal(
@@ -159,7 +168,8 @@ def separable_fused(
         # Degrade to the 2-stage path: standalone expansion GEMM (its output
         # rounds to the activation dtype), then DW -> PW below.
         x = pwconv(x, expand_w, activation=expand_activation,
-                   impl="pallas", interpret=interpret)
+                   impl="pallas", interpret=interpret,
+                   vmem_budget=vmem_budget)
     plan = blocking.plan_separable(
         ho, wo, x.shape[-1], pw_w.shape[-1], stride=stride, hf=hf, wf=wf,
         dtype=x.dtype, vmem_budget=vmem_budget,
@@ -167,13 +177,14 @@ def separable_fused(
     if plan is None:
         # Even the minimal (cb=1, cob=1, slab_h=1) plan exceeds the budget:
         # compose the standalone kernels instead (correct, just not fused).
-        y = dwconv2d_pallas(x, dw_f, stride=stride, interpret=interpret)
+        y = dwconv2d_pallas(x, dw_f, stride=stride,
+                            vmem_budget=vmem_budget, interpret=interpret)
         if dw_bias is not None:
             y = y + dw_bias
         y = apply_epilogue(y, None, dw_activation).astype(x.dtype)
         out = pwconv(
             y, pw_w, pw_bias, activation=activation,
-            impl="pallas", interpret=interpret,
+            impl="pallas", interpret=interpret, vmem_budget=vmem_budget,
         )
         if residual is not None:
             out = out + residual
@@ -197,11 +208,13 @@ def pwconv(
     block_g: int | None = None,
     block_co: int | None = None,
     block_ci: int | None = None,
+    vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
 ) -> jax.Array:
     """Pointwise conv / GEMM over the last axis. x (..., Ci), w (Ci, Co).
 
     Block shapes default to :func:`repro.kernels.blocking.plan_pwconv`
-    (dtype-aware MXU-aligned grid); explicit overrides win.
+    (dtype-aware MXU-aligned grid, sized against ``vmem_budget``); explicit
+    overrides win.
     """
     impl = _resolve(impl)
     if impl == "xla":
@@ -210,7 +223,8 @@ def pwconv(
     x2 = x.reshape(-1, x.shape[-1])
     if block_g is None or block_co is None or block_ci is None:
         plan = blocking.plan_pwconv(x2.shape[0], w.shape[0], w.shape[1],
-                                    dtype=x.dtype)
+                                    dtype=x.dtype,
+                                    vmem_budget=vmem_budget)
         block_g = block_g or plan.block_g
         block_co = block_co or plan.block_co
         block_ci = block_ci or plan.block_c

@@ -50,11 +50,22 @@ class KernelPolicy:
     default) lets ``core/chain.plan`` fuse whatever fits the budget;
     ``False`` forces the unfused composition (the old default behavior);
     ``True`` is accepted for old call sites and means the same as ``None``.
+
+    autotune: measured plan selection (kernels/autotune.py). ``True`` makes
+    ``core/chain.plan``/``execute`` consult the persistent tune cache and,
+    on a miss, measure the candidate ladder on the first ``execute`` call
+    (the winner is persisted, so later runs replay it without measuring).
+    ``False`` (default) keeps today's analytic planner.
+    tune_cache: path of the on-disk JSON tune cache; ``None`` uses
+    ``kernels/autotune.default_cache_path()`` ($REPRO_TUNE_CACHE or
+    ~/.cache/repro/autotune.json).
     """
     impl: str = "auto"
     interpret: bool = False
     vmem_budget: int = DEFAULT_VMEM_BUDGET
     fused: Optional[bool] = None
+    autotune: bool = False
+    tune_cache: Optional[str] = None
     block_g: Optional[int] = None
     block_co: Optional[int] = None
     block_ci: Optional[int] = None

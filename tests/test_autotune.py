@@ -1,0 +1,252 @@
+"""The measured ChainPlan autotuner (kernels/autotune.py): cache
+round-trip (tune -> write -> reload -> hit with zero re-measurement,
+bitwise-identical replay), measured-winner parity with the analytic plan
+(fp32 + bf16), cache-key sensitivity (shape / dtype / budget / backend),
+corrupted-cache-file recovery, and the plan-fidelity guarantees the tuner
+relies on (the lowering executes plans verbatim)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chain
+from repro.kernels import autotune, blocking
+from repro.kernels.policy import KernelPolicy
+
+RNG = np.random.default_rng(7)
+
+#: Tiny geometry keeps interpret-mode Pallas measurement in seconds.
+CI_, CO_, EXPAND, RES = 8, 8, 4, 8
+
+
+def _problem(dtype=np.float32, res=RES, ci=CI_, co=CO_):
+    spec = chain.inverted_residual_spec(ci, co, expand=EXPAND, stride=1)
+    params = chain.init_chain(jax.random.PRNGKey(3), spec, ci)
+    if dtype != np.float32:
+        params = jax.tree_util.tree_map(lambda a: a.astype(dtype), params)
+    x = jnp.asarray(RNG.normal(size=(1, res, res, ci)).astype(np.float32))
+    return spec, params, x.astype(dtype)
+
+
+def _policy(tmp_path, **kw):
+    kw.setdefault("impl", "pallas")
+    kw.setdefault("interpret", True)
+    kw.setdefault("autotune", True)
+    kw.setdefault("tune_cache", str(tmp_path / "tune.json"))
+    return KernelPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip
+# ---------------------------------------------------------------------------
+
+def test_tune_write_reload_hit_no_remeasure(tmp_path, monkeypatch):
+    """First execute measures and persists; a fresh cache load replays the
+    winner with ZERO measurement and bitwise-identical output."""
+    spec, params, x = _problem()
+    pol = _policy(tmp_path)
+    y1 = chain.execute(spec, params, x, policy=pol)
+    assert os.path.exists(pol.tune_cache)
+    raw = json.load(open(pol.tune_cache))
+    assert raw["version"] == autotune.CACHE_VERSION
+    (entry,) = raw["entries"].values()
+    assert entry["n_measured"] >= 1
+    assert entry["measured_us"] > 0
+
+    # simulate the second process: any measurement now is a bug
+    def _boom(*a, **k):
+        raise AssertionError("cache hit must not re-measure")
+    monkeypatch.setattr(autotune, "measure_run", _boom)
+    base = chain.plan(spec, x.shape, dtype=x.dtype,
+                      policy=dataclasses.replace(pol, autotune=False))
+    r = autotune.autotune_chain(spec, params, x, policy=pol, base_plan=base)
+    assert r.cache_hit and r.n_measured == 0
+    y2 = chain.execute(spec, params, x, policy=pol)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_plan_consults_cache(tmp_path):
+    """core/chain.plan with autotune returns the cached measured plan; on a
+    miss (or with tuning disabled) it answers analytically."""
+    spec, params, x = _problem()
+    pol = _policy(tmp_path)
+    analytic = chain.plan(spec, x.shape, dtype=x.dtype,
+                          policy=dataclasses.replace(pol, autotune=False))
+    # miss: plan() must still answer (analytically)
+    assert chain.plan(spec, x.shape, dtype=x.dtype, policy=pol) == analytic
+    r = autotune.autotune_chain(spec, params, x, policy=pol,
+                                base_plan=analytic)
+    assert not r.cache_hit
+    got = chain.plan(spec, x.shape, dtype=x.dtype, policy=pol)
+    assert got == r.plan
+
+
+def test_chain_plan_serialization_round_trip():
+    spec = chain.inverted_residual_spec(16, 16, expand=6, stride=1)
+    cp = chain.plan(spec, (1, 14, 14, 16))
+    d = autotune.serialize_chain_plan(cp)
+    json.dumps(d)  # must be pure-JSON serializable
+    assert autotune.deserialize_chain_plan(d) == cp
+    cp_u = chain.plan(spec, (1, 14, 14, 16), policy=KernelPolicy(fused=False))
+    assert autotune.deserialize_chain_plan(
+        autotune.serialize_chain_plan(cp_u)) == cp_u
+
+
+# ---------------------------------------------------------------------------
+# measured winner parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_measured_plan_parity_with_analytic(tmp_path, dtype):
+    """Whatever candidate wins the measurement, its output matches the
+    analytic plan's (every candidate is a feasibility-checked blocking of
+    the SAME computation)."""
+    spec, params, x = _problem(dtype=dtype)
+    pol = _policy(tmp_path)
+    y_tuned = chain.execute(spec, params, x, policy=pol)
+    y_analytic = chain.execute(
+        spec, params, x, policy=dataclasses.replace(pol, autotune=False))
+    tol = 1e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_tuned, np.float32),
+                               np.asarray(y_analytic, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_multi_segment_chain_tunes_and_matches(tmp_path):
+    """Coordinate descent over a pw+dw+pw chain (fused=False): every
+    segment contributes candidates, output parity holds."""
+    spec, params, x = _problem()
+    pol = _policy(tmp_path, fused=False)
+    y = chain.execute(spec, params, x, policy=pol)
+    y_ref = chain.execute(
+        spec, params, x, policy=dataclasses.replace(pol, autotune=False))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    (entry,) = json.load(open(pol.tune_cache))["entries"].values()
+    assert [s["kind"] for s in entry["plan"]["segments"]] == [
+        "pw", "dw", "pw"]
+    assert entry["n_measured"] > autotune.MAX_SEGMENT_CANDIDATES
+
+
+# ---------------------------------------------------------------------------
+# cache-key sensitivity
+# ---------------------------------------------------------------------------
+
+def test_problem_key_changes_with_shape_dtype_budget():
+    spec, _, _ = _problem()
+    pol = KernelPolicy(impl="pallas", interpret=True, autotune=True)
+    base = autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32, pol)
+    assert autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32, pol) == base
+    assert autotune.problem_key(spec, (1, 16, 16, 8), jnp.float32,
+                                pol) != base
+    assert autotune.problem_key(spec, (2, 8, 8, 8), jnp.float32, pol) != base
+    assert autotune.problem_key(spec, (1, 8, 8, 8), jnp.bfloat16,
+                                pol) != base
+    small = dataclasses.replace(pol, vmem_budget=1 << 20)
+    assert autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32,
+                                small) != base
+    xla = dataclasses.replace(pol, impl="xla")
+    assert autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32,
+                                xla) != base
+    other_spec = chain.inverted_residual_spec(CI_, CO_, expand=EXPAND,
+                                              stride=2)
+    assert autotune.problem_key(other_spec, (1, 8, 8, 8), jnp.float32,
+                                pol) != base
+
+
+def test_distinct_problems_get_distinct_entries(tmp_path):
+    """Two shapes tune into the same file without clobbering each other."""
+    spec, params, x8 = _problem()
+    _, _, x12 = _problem(res=12)
+    pol = _policy(tmp_path)
+    chain.execute(spec, params, x8, policy=pol)
+    chain.execute(spec, params, x12, policy=pol)
+    raw = json.load(open(pol.tune_cache))
+    assert len(raw["entries"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# corrupted-cache recovery
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("garbage", [
+    "not json at all {{{",
+    '{"version": 999, "entries": "nope"}',
+    '[]',
+    '',
+])
+def test_corrupted_cache_file_recovers(tmp_path, garbage):
+    """A trashed cache file must neither crash nor poison the result: the
+    tuner falls back to measuring from the analytic plan and REWRITES a
+    valid cache."""
+    spec, params, x = _problem()
+    pol = _policy(tmp_path)
+    with open(pol.tune_cache, "w") as f:
+        f.write(garbage)
+    y = chain.execute(spec, params, x, policy=pol)
+    y_ref = chain.execute(
+        spec, params, x, policy=dataclasses.replace(pol, autotune=False))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    raw = json.load(open(pol.tune_cache))  # rewritten, valid again
+    assert raw["version"] == autotune.CACHE_VERSION and raw["entries"]
+
+
+def test_corrupted_entry_retunes(tmp_path):
+    """A structurally-valid file with an undecodable entry re-tunes that
+    key instead of crashing."""
+    spec, params, x = _problem()
+    pol = _policy(tmp_path)
+    key = autotune.problem_key(spec, x.shape, x.dtype, pol)
+    cache = autotune.TuneCache(pol.tune_cache)
+    cache.put(key, {"plan": {"segments": "garbage"}})
+    cache.save()
+    y = chain.execute(spec, params, x, policy=pol)
+    assert y.shape == (1, RES, RES, CO_)
+    (entry,) = json.load(open(pol.tune_cache))["entries"].values()
+    assert entry["n_measured"] >= 1  # re-measured and overwrote
+
+
+def test_lookup_cached_plan_miss_returns_none(tmp_path):
+    spec, _, x = _problem()
+    pol = _policy(tmp_path)
+    assert autotune.lookup_cached_plan(spec, x.shape, x.dtype, pol) is None
+
+
+# ---------------------------------------------------------------------------
+# candidate ladder
+# ---------------------------------------------------------------------------
+
+def test_segment_candidates_feasible_and_capped():
+    spec = chain.inverted_residual_spec(16, 24, expand=6, stride=2)
+    cp = chain.plan(spec, (1, 28, 28, 16))
+    (geom,) = autotune._segment_geoms(spec.stages, cp, (1, 28, 28, 16))
+    cands = autotune.segment_candidates(
+        geom, cp.segments[0].plan, jnp.float32, blocking.DEFAULT_VMEM_BUDGET)
+    assert 1 < len(cands) <= autotune.MAX_SEGMENT_CANDIDATES
+    assert cands[0] == cp.segments[0].plan           # analytic plan first
+    assert len(set(cands)) == len(cands)             # deduplicated
+    for p in cands:
+        assert p.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+
+
+def test_plan_separable_at_matches_ladder_corner():
+    """The explicit-point probe agrees with the analytic walk at the point
+    the walk selects."""
+    p = blocking.plan_separable(56, 56, 144, 32, stride=2)
+    q = blocking.plan_separable_at(56, 56, 144, 32, block_co=p.block_co,
+                                   slab_h=p.slab_h, stride=2)
+    assert q == p
+    p3 = blocking.plan_separable3(28, 28, 32, 192, 64, stride=1)
+    q3 = blocking.plan_separable3_at(28, 28, 32, 192, 64,
+                                     block_co=p3.block_co,
+                                     slab_h=p3.slab_h, stride=1)
+    assert q3 == p3
+    # infeasible explicit point answers None, never a bogus plan
+    assert blocking.plan_separable_at(56, 56, 144, 32, block_co=32,
+                                      slab_h=56, stride=2,
+                                      vmem_budget=1024) is None

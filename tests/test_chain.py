@@ -336,6 +336,63 @@ def test_chain_traffic_unfused_residual_counts_separate_add():
     assert t.bytes_hbm > t_f.bytes_hbm  # unfused + residual add cost more
 
 
+def test_dw_epilogue_traffic_counted():
+    """A standalone DW with bias/activation pays a separate elementwise
+    epilogue (read + re-write of the whole output tensor, plus the bias
+    vector); a bare DW pays nothing extra."""
+    shape = (1, 12, 12, 16)
+    b, ho, wo, c = 1, 12, 12, 16
+
+    def _traffic(bias, activation):
+        spec = chain.SeparableSpec(
+            stages=(chain.DW(stride=1, bias=bias, activation=activation),),
+            residual=False)
+        cp = chain.plan(spec, shape)
+        assert _kinds(cp) == ["dw"]
+        return chain.chain_traffic(spec, cp, shape)
+
+    bare = _traffic(False, None)
+    act = _traffic(False, "relu6")
+    full = _traffic(True, "relu6")
+    # activation only: 2 * tensor bytes, one flop per element
+    assert act.bytes_hbm - bare.bytes_hbm == 4 * 2 * b * ho * wo * c
+    assert act.flops - bare.flops == b * ho * wo * c
+    # bias adds one streamed read of the C-vector on top
+    assert full.bytes_hbm - act.bytes_hbm == 4 * c
+    # bias-only (no activation) still pays the epilogue
+    bias_only = _traffic(True, None)
+    assert bias_only.bytes_hbm == full.bytes_hbm
+
+
+@pytest.mark.parametrize("h,ci,ex,co,stride", V2_GOLDEN)
+@pytest.mark.parametrize("nb", [4, 2])
+def test_unfused_chain_traffic_exceeds_fused_every_v2_shape(h, ci, ex, co,
+                                                            stride, nb):
+    """End-to-end chain_traffic gate: the unfused lowering's modeled HBM
+    bytes — INCLUDING the standalone-DW epilogue pass — strictly exceed
+    the fused plan's at every MobileNetV2 geometry, fp32 and bf16."""
+    spec = chain.inverted_residual_spec(ci, co, expand=ex, stride=stride)
+    shape = (1, h, h, ci)
+    cp_f = chain.plan(spec, shape)
+    cp_u = chain.plan(spec, shape, policy=KernelPolicy(fused=False))
+    assert cp_f.fully_fused and _kinds(cp_u) == ["pw", "dw", "pw"]
+    t_f = chain.chain_traffic(spec, cp_f, shape, dtype_bytes=nb)
+    t_u = chain.chain_traffic(spec, cp_u, shape, dtype_bytes=nb)
+    assert t_u.bytes_hbm > t_f.bytes_hbm, (h, ci, co, nb)
+    # the V2 DW stage is activated (relu6, no bias): the unfused total
+    # must carry exactly its epilogue term — diff against the same chain
+    # with the DW activation stripped
+    import dataclasses as dc
+    stages = list(spec.stages)
+    stages[1] = dc.replace(stages[1], activation=None)
+    bare = dc.replace(spec, stages=tuple(stages))
+    t_bare = chain.chain_traffic(bare, cp_u, shape, dtype_bytes=nb)
+    ho = -(-h // stride)
+    epi = nb * 2 * 1 * ho * ho * ci * ex
+    assert t_u.bytes_hbm - t_bare.bytes_hbm == epi
+    assert t_u.flops - t_bare.flops == 1 * ho * ho * ci * ex
+
+
 # ---------------------------------------------------------------------------
 # plan_separable3 planner unit behavior
 # ---------------------------------------------------------------------------
