@@ -1,0 +1,110 @@
+"""Whole-network traffic table (DESIGN.md §7): what the network engine
+plans a full MobileNet body to, and what moving the streamed operands at
+bf16 saves.
+
+One row per (arch x body-input resolution):
+
+* ``passes`` / ``histo`` / ``single_pass`` — the NetworkPlan's kernel-pass
+  count and per-segment-kind histogram; ``single_pass=True`` means every
+  block lowers to ONE fused kernel pass.
+* ``ir_fused3`` — every 3-stage block (the t=6 inverted residuals) planned
+  to the 3-stage fused kernel, under BOTH the fp32 and bf16 policies.
+* ``MB_unfused`` / ``MB_fp32`` / ``MB_bf16`` — modeled HBM bytes of the
+  per-block unfused composition (fp32), the fused fp32 network, and the
+  bf16-streamed network (``core.intensity.network_traffic`` — bytes at each
+  plan's budgeted stream width).
+* ``traffic_ok`` — the CI gate predicate, computed here in Python:
+  ``MB_bf16 < MB_fp32 < MB_unfused`` strictly.
+
+Dry-run only (shape arithmetic, no compilation): cheap enough to run every
+geometry every time.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import intensity as it
+from repro.core import network
+from repro.kernels.policy import DtypePolicy, KernelPolicy
+
+#: Body-input resolutions benchmarked (a 224 ImageNet image reaches the
+#: body at 112 after the stride-2 stem; 56 and 224 bracket it).
+RESOLUTIONS = (56, 112, 224)
+
+
+def network_rows(resolutions=RESOLUTIONS) -> list:
+    rows = []
+    nets = (("mobilenet_v1", network.mobilenet_v1_spec()),
+            ("mobilenet_v2", network.mobilenet_v2_spec()))
+    p32 = KernelPolicy()
+    pbf = KernelPolicy(dtype_policy=DtypePolicy(stream="bfloat16"))
+    punf = KernelPolicy(fused=False)
+    for name, net in nets:
+        for res in resolutions:
+            shape = (1, res, res, net.c_in)
+            n32 = network.plan_network(net, shape, policy=p32)
+            nbf = network.plan_network(net, shape, policy=pbf)
+            nunf = network.plan_network(net, shape, policy=punf)
+            t32 = it.network_traffic(net, n32)
+            tbf = it.network_traffic(net, nbf)
+            tunf = it.network_traffic(net, nunf)
+            # every 3-stage block must plan fused3 under both dtype policies
+            ir_fused3 = all(
+                p.segments[0].kind == "fused3"
+                for nplan in (n32, nbf)
+                for spec, p in zip(net.blocks, nplan.plans)
+                if len(spec.stages) == 3)
+            rows.append({
+                "name": f"{name}/res{res}",
+                "blocks": net.n_blocks,
+                "passes": n32.n_kernel_passes,
+                "histo": "+".join(
+                    f"{k}:{v}" for k, v in
+                    sorted(n32.segment_histogram().items())),
+                "single_pass": bool(n32.fully_fused and nbf.fully_fused),
+                "ir_fused3": bool(ir_fused3),
+                "mb_unfused": tunf.bytes_hbm / 1e6,
+                "mb_fp32": t32.bytes_hbm / 1e6,
+                "mb_bf16": tbf.bytes_hbm / 1e6,
+                "gflops": t32.flops / 1e9,
+                "traffic_ok": bool(
+                    tbf.bytes_hbm < t32.bytes_hbm < tunf.bytes_hbm),
+            })
+    return rows
+
+
+def csv_network_rows(rows=None) -> list:
+    """``network/<arch>/res<N>`` rows for benchmarks/run.py."""
+    out = []
+    for r in rows if rows is not None else network_rows():
+        out.append(
+            f"network/{r['name']},0.0,"
+            f"blocks={r['blocks']};passes={r['passes']};"
+            f"histo={r['histo']};single_pass={r['single_pass']};"
+            f"ir_fused3={r['ir_fused3']};"
+            f"MB_unfused={r['mb_unfused']:.2f};"
+            f"MB_fp32={r['mb_fp32']:.2f};MB_bf16={r['mb_bf16']:.2f};"
+            f"GFLOP={r['gflops']:.3f};traffic_ok={r['traffic_ok']}")
+    return out
+
+
+def markdown_table(rows=None) -> str:
+    rows = rows if rows is not None else network_rows()
+    lines = [
+        "| network | blocks | passes | plan | MB unfused | MB fp32 "
+        "| MB bf16 | ok |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['name']} | {r['blocks']} | {r['passes']} | {r['histo']} "
+            f"| {r['mb_unfused']:.2f} | {r['mb_fp32']:.2f} "
+            f"| {r['mb_bf16']:.2f} | {r['traffic_ok']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

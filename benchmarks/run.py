@@ -103,6 +103,14 @@ def main() -> None:
             f"MB_unfused={r['mb_unfused']:.2f};"
             f"MB_saved_vs_2stage={r['saved_vs_2stage_mb']:.2f}")
 
+    # whole-network table (DESIGN.md §7): the network engine's plan for the
+    # full V1/V2 bodies and the bf16-streaming traffic reduction — CI gates
+    # traffic_ok (bf16 < fp32 fused < per-block unfused, strict) per row
+    from benchmarks.network_table import csv_network_rows, network_rows
+    net_rows = network_rows()
+    rows.extend(csv_network_rows(net_rows))
+    results["network"] = net_rows
+
     a = results["fig1_anchor"]
     rows.append(f"fig1/{a['name']},{a['us_xla_cpu']:.1f},"
                 f"naive_loops_us={a['us_naive_loops']:.0f};"

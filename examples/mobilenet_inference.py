@@ -1,22 +1,20 @@
-"""The paper's own workload: MobileNet inference built entirely from the
-paper's two ops, driven by the declarative chain API (spec -> plan ->
-lower -> execute, DESIGN.md §5) — with the per-layer arithmetic-intensity
-report that drives the paper's analysis.
+"""The paper's own workload: full MobileNet V1/V2 bodies through the
+whole-network chain engine (NetworkSpec -> NetworkPlan -> ONE jitted
+execute_network call, DESIGN.md §7) with per-segment mixed-precision
+streaming.
 
   PYTHONPATH=src python examples/mobilenet_inference.py \
-      [--pallas] [--fused] [--res N]
+      [--pallas] [--res N] [--dtype fp32|bf16] [--arch v1|v2|both]
 
+--dtype bf16 streams activations and weights as bf16 while every kernel
+accumulates in fp32 (the DtypePolicy of DESIGN.md §7) — the modeled HBM
+traffic halves, which is the whole game for these memory-bound ops.
 --pallas runs the Pallas kernels in interpret mode (slow, CPU) instead of
 the XLA path, and cross-checks outputs.
---fused lets the chain planner fuse every block (the default policy): each
-V1 separable block plans to one DW->PW kernel pass, and each V2 inverted
-residual to ONE 3-stage pass (PW-expand computed on the fly -> DW ->
-PW-project, residual folded into the store) — neither intermediate touches
-HBM.  The demo prints each block's ChainPlan, cross-checks fused against
-the unfused composition (KernelPolicy(fused=False), the legacy opt-out),
-and reports the modeled HBM bytes the planner's fusion removes.
---res N runs at an NxN input instead of 112x112 (CI smoke-tests the fused
-interpret path at --res 16).
+--res N runs at an NxN body input instead of 112x112 (a 224 image after
+the stem).  CI smokes --res 16 (fp32, interpret) and --res 32 --dtype bf16.
+--fused is accepted for compatibility; fusion is a planner decision now
+and always on (KernelPolicy(fused=False) remains the opt-out).
 """
 import os
 import sys
@@ -29,58 +27,81 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import KernelPolicy, chain
-from repro.core.separable import init_separable, separable_block
+from repro.core import KernelPolicy, chain, network
 from repro.core import intensity as it
+from repro.kernels.policy import DtypePolicy
 
-# MobileNetV1 body: (c_in, c_out, stride) per separable block (Table 1)
-V1_BLOCKS = [
-    (32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
-    (256, 256, 1), (256, 512, 2),
-    (512, 512, 1), (512, 512, 1), (512, 512, 1), (512, 512, 1),
-    (512, 512, 1), (512, 1024, 2), (1024, 1024, 1),
-]
+#: bf16-vs-fp32 network tolerance (documented in DESIGN.md §7 and asserted
+#: by tests/test_network.py): one bf16 rounding per streamed operand per
+#: block, compounded over 13-17 blocks, lands ~1e-2; 5e-2 is the gate.
+BF16_REL_TOL = 5e-2
 
 
-def build(key):
-    params = []
-    for i, (ci, co, s) in enumerate(V1_BLOCKS):
-        params.append(init_separable(jax.random.fold_in(key, i), ci, co))
-    return params
+def _policy(args, dtype_policy):
+    return KernelPolicy(impl="pallas" if args.pallas else "xla",
+                        interpret=args.pallas, dtype_policy=dtype_policy)
 
 
-def forward(params, x, policy):
-    for p, (ci, co, s) in zip(params, V1_BLOCKS):
-        x = separable_block(p, x, stride=s, policy=policy)
-    x = jnp.mean(x, axis=(1, 2))  # global average pool
-    return x
+def run_network(name, net, args):
+    dp = (DtypePolicy(stream="bfloat16") if args.dtype == "bf16"
+          else DtypePolicy())
+    pol = _policy(args, dp)
+    res = args.res
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, res, res, net.c_in))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    if args.dtype == "bf16":
+        # deployment-style: store the weights once at the stream width
+        params = network.cast_network_params(params, jnp.bfloat16)
 
+    nplan = network.plan_network(net, x.shape, policy=pol)
+    histo = ",".join(f"{k}:{v}"
+                     for k, v in sorted(nplan.segment_histogram().items()))
+    print(f"\n{name} body @{res}x{res} ({args.dtype}, {pol.impl}"
+          f"{' interpret' if pol.interpret else ''}):")
+    print(f"  plan: {net.n_blocks} blocks -> {nplan.n_kernel_passes} kernel "
+          f"passes ({histo}), fully fused: {nplan.fully_fused}")
 
-def v2_single_pass_demo(policy, res):
-    """A whole MobileNetV2 inverted residual through the chain API: spec ->
-    plan (one fused3 pass) -> execute, checked against the unfused plan."""
-    spec = chain.inverted_residual_spec(32, 32, expand=6, stride=1)
-    shape = (1, res, res, 32)
-    cp = chain.plan(spec, shape, policy=policy)
-    t = chain.chain_traffic(spec, cp, shape)
-    cp_unf = chain.plan(spec, shape, policy=KernelPolicy(
-        impl=policy.impl, interpret=policy.interpret, fused=False))
-    t_unf = chain.chain_traffic(spec, cp_unf, shape)
-    print(f"V2 inverted residual {res}x{res}x32 (expand 6): plan = "
-          f"{'+'.join(s.kind for s in cp.segments)}, "
-          f"kernel passes = {cp.n_kernel_passes} "
-          f"(residual {'folded' if cp.residual_fused else 'separate'})")
-    print(f"  modeled HBM: fused chain {t.bytes_hbm/1e6:.2f} MB vs "
-          f"unfused {t_unf.bytes_hbm/1e6:.2f} MB "
-          f"(neither the expanded tensor nor the DW output leaves VMEM)")
-    params = chain.init_chain(jax.random.PRNGKey(7), spec, 32)
-    x = jax.random.normal(jax.random.PRNGKey(8), shape)
-    y = chain.execute(spec, params, x, policy=policy, chain_plan=cp)
-    y_unf = chain.execute(spec, params, x, policy=KernelPolicy(
-        impl=policy.impl, interpret=policy.interpret, fused=False))
-    err = float(jnp.abs(y - y_unf).max())
-    print(f"  single-pass vs unfused-composition maxerr: {err:.2e}")
-    assert err < 1e-3, "fused V2 chain diverged from the unfused oracle"
+    t = it.network_traffic(net, nplan)
+    n32 = network.plan_network(net, x.shape, policy=_policy(args,
+                                                            DtypePolicy()))
+    t32 = it.network_traffic(net, n32)
+    nunf = network.plan_network(
+        net, x.shape,
+        policy=KernelPolicy(impl=pol.impl, interpret=pol.interpret,
+                            fused=False))
+    tunf = it.network_traffic(net, nunf)
+    print(f"  modeled HBM: {t.bytes_hbm/1e6:.2f} MB "
+          f"(fp32 fused {t32.bytes_hbm/1e6:.2f} MB, per-block unfused "
+          f"{tunf.bytes_hbm/1e6:.2f} MB); AI {t.intensity:.1f} FLOPs/B")
+
+    # ONE jitted call for the whole backbone; plan resolved once above.
+    y = network.execute_network(net, params, x, policy=pol,
+                                network_plan=nplan)
+    jax.block_until_ready(y)
+    reps = 2 if args.pallas else 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = network.execute_network(net, params, x, policy=pol,
+                                    network_plan=nplan)
+    jax.block_until_ready(y)
+    ms = (time.perf_counter() - t0) / reps * 1e3
+    print(f"  end-to-end: {ms:.2f} ms/image -> features {y.shape} {y.dtype}")
+
+    # Parity vs the fp32 per-block oracle (XLA, native dtype, fresh fp32
+    # weights — the pre-network-engine execution path).
+    p32 = network.init_network(jax.random.PRNGKey(0), net)
+    oracle = KernelPolicy(impl="xla")
+    ref = x
+    for spec, p in zip(net.blocks, p32):
+        ref = chain.execute(spec, p, ref, policy=oracle)
+    ref = np.asarray(ref, np.float32)
+    got = np.asarray(y, np.float32)
+    rel = float(np.abs(got - ref).max() / (np.abs(ref).max() + 1e-30))
+    tol = BF16_REL_TOL if args.dtype == "bf16" else 1e-5
+    print(f"  vs fp32 per-block oracle: max rel err {rel:.2e} "
+          f"(tol {tol:g})")
+    assert rel < tol, f"{name}: {rel} >= {tol}"
+    return ms
 
 
 def main():
@@ -90,77 +111,29 @@ def main():
                     help="run the Pallas kernels in interpret mode (slow, "
                          "CPU) and cross-check against the XLA path")
     ap.add_argument("--fused", action="store_true",
-                    help="let the chain planner fuse every block (V1: one "
-                         "DW->PW pass; V2: ONE 3-stage expand->DW->project "
-                         "pass, DESIGN.md §5) and cross-check against the "
-                         "unfused composition")
+                    help="(compat no-op) fusion is a planner decision and "
+                         "always on; KernelPolicy(fused=False) opts out")
     ap.add_argument("--res", type=int, default=112, metavar="N",
-                    help="input resolution NxN (CI smokes --res 16)")
+                    help="body input resolution NxN (a 224 image after the "
+                         "stem is 112; CI smokes 16 and 32)")
+    ap.add_argument("--dtype", choices=("fp32", "bf16"), default="fp32",
+                    help="streaming dtype policy: bf16 halves the streamed "
+                         "HBM bytes, accumulation stays fp32 (DESIGN.md §7)")
+    ap.add_argument("--arch", choices=("v1", "v2", "both"), default="both")
     args = ap.parse_args()
-    use_pallas, use_fused, res = args.pallas, args.fused, args.res
-    key = jax.random.PRNGKey(0)
-    params = build(key)
-    x = jax.random.normal(jax.random.PRNGKey(1), (1, res, res, 32))
 
-    # fused=False pins the legacy unfused composition as the baseline
-    xla = KernelPolicy(impl="xla", fused=False)
-    fn = jax.jit(lambda p, x: forward(p, x, xla))
-    out = fn(params, x)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    out = fn(params, x)
-    jax.block_until_ready(out)
-    dt = time.perf_counter() - t0
-    print(f"MobileNetV1 body fwd (XLA CPU, unfused): {dt*1e3:.1f} ms, "
-          f"features {out.shape}")
+    nets = []
+    if args.arch in ("v1", "both"):
+        nets.append(("MobileNetV1", network.mobilenet_v1_spec()))
+    if args.arch in ("v2", "both"):
+        nets.append(("MobileNetV2", network.mobilenet_v2_spec()))
+    for name, net in nets:
+        run_network(name, net, args)
 
-    if use_pallas:
-        pal = KernelPolicy(impl="pallas", interpret=True, fused=False)
-        out_p = forward(params, x, pal)
-        err = float(jnp.abs(out - out_p).max())
-        print(f"Pallas(interpret) vs XLA maxerr: {err:.2e}")
-
-    if use_fused:
-        # default policy: the chain planner fuses whatever fits its budget
-        fused = KernelPolicy(impl="pallas" if use_pallas else "xla",
-                             interpret=use_pallas)
-        fn_f = jax.jit(lambda p, x: forward(p, x, fused))
-        out_f = fn_f(params, x)
-        jax.block_until_ready(out_f)
-        t0 = time.perf_counter()
-        out_f = fn_f(params, x)
-        jax.block_until_ready(out_f)
-        dtf = time.perf_counter() - t0
-        err = float(jnp.abs(out - out_f).max())
-        print(f"planner-fused separable blocks ({fused.impl}): "
-              f"{dtf*1e3:.1f} ms, maxerr vs unfused: {err:.2e}")
-        h2 = res
-        saved = 0.0
-        for ci, co, s in V1_BLOCKS:
-            ho = -(-h2 // s)
-            hi_p = (ho - 1) * s + 3
-            saved += it.separable_intermediate_bytes(
-                1, hi_p, hi_p, ci, co, 3, 3, s)
-            h2 = ho
-        print(f"modeled HBM bytes removed by fusion (whole body): "
-              f"{saved/1e6:.1f} MB (the DW intermediate round-trips, "
-              f"DESIGN.md §3)")
-        v2_single_pass_demo(fused, min(res, 28))
-
-    print("\nper-layer AI report (paper's analysis, DESIGN.md §2):")
-    print(f"{'block':8s} {'HxW':>9s} {'C':>5s} {'DW AI ours':>11s} "
-          f"{'DW AI tflite':>13s} {'PW AI rtrd':>11s} {'PW AI rtra':>11s}")
-    h = res
-    for i, (ci, co, s) in enumerate(V1_BLOCKS):
-        ho = h // s
-        print(f"B{i:<7d} {h:>4d}x{ho:<4d} {ci:>5d} "
-              f"{it.t_ours_dw_asymptotic(3, 3):>11.3f} "
-              f"{it.t_tf_dw(4):>13.3f} "
-              f"{it.t_rtrd_pw(ci=ci):>11.3f} "
-              f"{it.t_rtra_pw(co=co):>11.3f}")
-        h = ho
-    print("\n(T_ours >= 9/22 = 0.409 vs TF-Lite < 1/6; RTRD ~1.5x RTRA — "
-          "the paper's claims)")
+    print("\nper-layer AI bounds (paper's analysis, DESIGN.md §2): "
+          f"DW ours {it.t_ours_dw_asymptotic(3, 3):.3f} vs TF-Lite "
+          f"{it.t_tf_dw(4):.3f}; PW RTRD {it.t_rtrd_pw(ci=1024):.3f} vs "
+          f"RTRA {it.t_rtra_pw(co=1024):.3f}")
 
 
 if __name__ == "__main__":

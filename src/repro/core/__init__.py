@@ -1,5 +1,6 @@
 """Core: the paper's DWConv/PWConv contributions as composable framework ops,
-plus the declarative separable-chain API (spec -> plan -> lower -> execute)."""
+the declarative separable-chain API (spec -> plan -> lower -> execute), and
+the whole-network engine (NetworkSpec -> NetworkPlan -> execute_network)."""
 from repro.core.chain import (
     DW,
     PW,
@@ -17,6 +18,17 @@ from repro.core.dwconv import (
     depthwise2d,
     init_conv_state,
 )
+from repro.core.network import (
+    NetworkPlan,
+    NetworkSpec,
+    cast_network_params,
+    execute_network,
+    init_network,
+    mobilenet_v1_spec,
+    mobilenet_v2_spec,
+    plan_network,
+    tune_network,
+)
 from repro.core.pwconv import DEFAULT_POLICY, KernelPolicy, pointwise
 from repro.core.separable import (
     init_inverted_residual,
@@ -24,13 +36,25 @@ from repro.core.separable import (
     inverted_residual,
     separable_block,
 )
+from repro.kernels.policy import BF16_STREAM, DtypePolicy
 
 __all__ = [
+    "BF16_STREAM",
     "DEFAULT_POLICY",
     "DW",
+    "DtypePolicy",
     "KernelPolicy",
+    "NetworkPlan",
+    "NetworkSpec",
     "PW",
     "SeparableSpec",
+    "cast_network_params",
+    "execute_network",
+    "init_network",
+    "mobilenet_v1_spec",
+    "mobilenet_v2_spec",
+    "plan_network",
+    "tune_network",
     "depthwise1d_causal",
     "depthwise1d_step",
     "depthwise2d",

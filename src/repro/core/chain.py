@@ -204,12 +204,20 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     this exact problem signature wins over the analytic walk; on a cache
     miss this function still answers analytically (measurement needs data
     and happens in :func:`execute`).
+
+    Mixed precision (DESIGN.md §7): all VMEM budgeting happens at the
+    policy's STREAM dtype, not the input's native dtype — a bf16-streaming
+    policy halves the streamed working set, so the same budget affords
+    larger blocks (fewer panels, less input re-fetch).  The returned
+    ``ChainPlan.dtype_bytes`` is likewise the stream width, which makes
+    :func:`chain_traffic` model the streamed bytes automatically.
     """
     if policy.autotune:
         cached = autotune.lookup_cached_plan(spec, x_shape, dtype, policy)
         if cached is not None:
             return cached
     b, h, w, c = x_shape
+    dtype = policy.dtype_policy.stream_dtype(dtype)
     stages = spec.stages
     n = len(stages)
     # The residual also needs the spatial dims preserved (a valid-padded DW

@@ -319,3 +319,30 @@ def pwconv_traffic_rtra(
         + g * co * 2 * n_kpanels    # D loaded+stored per reduction block
     )
     return Traffic(flops, bytes_)
+
+
+def network_traffic(net, network_plan, *,
+                    dtype_bytes: int | None = None) -> Traffic:
+    """Modeled HBM traffic + FLOPs of a planned whole network: the sum of
+    ``chain_traffic`` over every block at the shapes the NetworkPlan walked
+    (DESIGN.md §7).
+
+    Each block's bytes are counted at ITS plan's ``dtype_bytes`` — the
+    stream width the planner budgeted at — so a bf16-streaming policy
+    (``ChainPlan.dtype_bytes == 2``) halves every streamed term relative to
+    the fp32 baseline, block by block, with no change to the FLOP count.
+    ``dtype_bytes`` overrides that width uniformly (what-if re-costing).
+
+    ``net`` / ``network_plan`` are ``core/network.py``'s NetworkSpec /
+    NetworkPlan (duck-typed here; the lazy import below avoids the cycle
+    core.chain -> core.intensity).
+    """
+    from repro.core import chain  # deferred: chain imports this module
+    flops = 0.0
+    bytes_ = 0.0
+    for spec, cp, shape in zip(net.blocks, network_plan.plans,
+                               network_plan.block_shapes):
+        t = chain.chain_traffic(spec, cp, shape, dtype_bytes=dtype_bytes)
+        flops += t.flops
+        bytes_ += t.bytes_hbm
+    return Traffic(flops, bytes_)

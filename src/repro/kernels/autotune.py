@@ -54,7 +54,10 @@ from repro.kernels.policy import KernelPolicy
 
 #: Cache-file schema version; bump on incompatible layout changes (old
 #: files then read as empty and re-tune, they are never mis-parsed).
-CACHE_VERSION = 1
+#: v2: problem signatures gained the per-segment dtype policy (DESIGN §7) —
+#: v1 keys hashed only the input dtype, so a bf16-streamed winner could
+#: replay onto a native fp32 run of the same problem.
+CACHE_VERSION = 2
 
 #: Feasible candidates measured per chain segment (incl. the analytic plan).
 MAX_SEGMENT_CANDIDATES = 8
@@ -113,6 +116,11 @@ def problem_signature(spec, x_shape: Sequence[int], dtype,
         "residual": residual if isinstance(residual, bool) else str(residual),
         "x_shape": [int(v) for v in x_shape],
         "dtype": jnp.dtype(dtype).name,
+        # ``dtype`` alone is NOT the precision identity: the dtype policy
+        # changes both what was measured (streamed bytes) and what the plan
+        # was budgeted at (stream-width VMEM), so a bf16-streamed winner
+        # must never replay onto a native run of the same input dtype.
+        "dtype_policy": policy.dtype_policy.signature(),
         "vmem_budget": int(policy.vmem_budget),
         "backend": backend_fingerprint(policy),
     }

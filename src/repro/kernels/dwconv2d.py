@@ -55,7 +55,7 @@ def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "interpret", "block_c",
-                                             "vmem_budget"))
+                                             "vmem_budget", "out_dtype"))
 def dwconv2d_pallas(
     x: jax.Array,
     f: jax.Array,
@@ -64,12 +64,16 @@ def dwconv2d_pallas(
     block_c: int | None = None,
     vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
     interpret: bool = False,
+    out_dtype: str | None = None,
 ) -> jax.Array:
     """x: (B, Hi, Wi, C); f: (Hf, Wf, C) -> (B, Ho, Wo, C). VALID geometry.
 
     An explicit ``block_c`` (e.g. a ``ChainSegment.plan``'s or a measured
     autotuner winner's) is executed verbatim; ``None`` re-plans at
-    ``vmem_budget``."""
+    ``vmem_budget``.  ``out_dtype`` (dtype NAME, static) selects the store
+    width of the single output write (DESIGN.md §7); ``None`` stores at
+    ``x.dtype``; accumulation is fp32 either way."""
+    odt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
     b, hi, wi, c = x.shape
     hf, wf, cf = f.shape
     assert c == cf, (x.shape, f.shape)
@@ -96,7 +100,7 @@ def dwconv2d_pallas(
     x = x[:, :hiu, :wiu, :]
 
     kernel = functools.partial(
-        _dw2d_kernel, hf=hf, wf=wf, stride=stride, out_dtype=x.dtype
+        _dw2d_kernel, hf=hf, wf=wf, stride=stride, out_dtype=odt
     )
     try:
         compiler_params = pltpu.CompilerParams(
@@ -115,7 +119,7 @@ def dwconv2d_pallas(
             pl.BlockSpec((hf, wf, cb), lambda i, j: (0, 0, j)),
         ],
         out_specs=pl.BlockSpec((1, ho, wo, cb), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cp), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cp), odt),
         compiler_params=compiler_params,
         interpret=interpret,
     )(x, f)

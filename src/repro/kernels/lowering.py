@@ -22,12 +22,20 @@ Stage objects are duck-typed (``features``/``activation``/``bias`` for PW,
 ``stride``/``hf``/``wf``/``padding``/``activation``/``bias`` for DW) so this
 module depends only on the kernel layer; the spec dataclasses live in
 ``core/chain.py``.
+
+The dtype policy (``KernelPolicy.dtype_policy``, DESIGN.md §7) is applied
+HERE, once per chain: the input and every parameter leaf are cast to the
+stream dtype at segment boundaries (no-ops when the caller pre-cast them,
+e.g. ``core/network.cast_network_params``), and the LAST kernel pass stores
+at the policy's ``out`` dtype via the kernels' ``out_dtype`` epilogue —
+accumulators stay fp32 inside every kernel regardless.
 """
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.blocking import ChainPlan
@@ -41,28 +49,34 @@ from repro.kernels.separable_fused import separable_fused_pallas
 PARAM_KEYS = {"pw": ("w", "b"), "dw": ("f", "b")}
 
 
-def _run_fused(seg, stages, params, y, res, *, impl, interpret):
+def _cast(a, dtype):
+    return None if a is None else a.astype(dtype)
+
+
+def _run_fused(seg, stages, params, y, res, *, impl, interpret,
+               stream_dtype, out_dtype):
     """One fused segment (2- or 3-stage) as a single kernel pass."""
     if seg.kind == "fused3":
         i_ex, i_dw, i_pw = seg.stages
-        expand_w = params[i_ex]["w"]
+        expand_w = params[i_ex]["w"].astype(stream_dtype)
         expand_act = stages[i_ex].activation
     else:
         i_dw, i_pw = seg.stages
         expand_w, expand_act = None, None
     d = stages[i_dw]
     proj = stages[i_pw]
-    dw_f = params[i_dw]["f"]
-    dw_b = params[i_dw].get("b")
-    pw_w = params[i_pw]["w"]
-    pw_b = params[i_pw].get("b")
+    dw_f = params[i_dw]["f"].astype(stream_dtype)
+    dw_b = _cast(params[i_dw].get("b"), stream_dtype)
+    pw_w = params[i_pw]["w"].astype(stream_dtype)
+    pw_b = _cast(params[i_pw].get("b"), stream_dtype)
     if impl == "xla":
-        return ref.separable_fused_ref(
+        out = ref.separable_fused_ref(
             y, dw_f, pw_w, dw_b, pw_b, res,
             expand_w=expand_w, expand_activation=expand_act,
             stride=d.stride, padding=d.padding,
             dw_activation=d.activation, activation=proj.activation,
         )
+        return out.astype(out_dtype)
     if d.padding.lower() == "same":
         y = ops.pad_same(y, d.hf, d.wf, d.stride)
     elif d.padding.lower() != "valid":
@@ -74,6 +88,7 @@ def _run_fused(seg, stages, params, y, res, *, impl, interpret):
         activation=proj.activation,
         block_c=seg.plan.block_c, block_co=seg.plan.block_co,
         slab_h=seg.plan.slab_h, interpret=interpret,
+        out_dtype=jnp.dtype(out_dtype).name,
     )
 
 
@@ -91,27 +106,37 @@ def lower(spec, chain_plan: ChainPlan,
     interpret = policy.interpret
     stages = spec.stages
     segments = chain_plan.segments
+    dp = policy.dtype_policy
 
     def run(params: Sequence[dict], x: jax.Array) -> jax.Array:
         assert len(params) == len(stages), (len(params), len(stages))
-        res = x if chain_plan.residual else None
-        y = x
+        sdt = dp.stream_dtype(x.dtype)
+        odt = dp.out_dtype(x.dtype)
+        y = x.astype(sdt)
+        res = y if chain_plan.residual else None
+        # the residual add after an unfused tail is a separate op, so the
+        # LAST kernel must still store at the stream width in that case
+        sep_res = chain_plan.residual and not chain_plan.residual_fused
         for si, seg in enumerate(segments):
-            seg_res = res if (chain_plan.residual_fused
-                              and si == len(segments) - 1) else None
+            last = si == len(segments) - 1
+            k_out = odt if (last and not sep_res) else sdt
+            seg_res = res if (chain_plan.residual_fused and last) else None
             if seg.kind in ("fused3", "fused2"):
                 y = _run_fused(seg, stages, params, y, seg_res,
-                               impl=impl, interpret=interpret)
+                               impl=impl, interpret=interpret,
+                               stream_dtype=sdt, out_dtype=k_out)
             elif seg.kind == "pw":
                 st = stages[seg.stages[0]]
                 p = params[seg.stages[0]]
                 y = ops.pwconv(
-                    y, p["w"], p.get("b"), activation=st.activation,
+                    y, p["w"].astype(sdt), _cast(p.get("b"), sdt),
+                    activation=st.activation,
                     impl=impl, interpret=interpret,
                     block_g=policy.block_g or seg.plan.block_g,
                     block_co=policy.block_co or seg.plan.block_co,
                     block_ci=policy.block_ci or seg.plan.block_c,
                     vmem_budget=policy.vmem_budget,
+                    out_dtype=jnp.dtype(k_out).name,
                 )
             else:  # "dw"
                 st = stages[seg.stages[0]]
@@ -120,14 +145,17 @@ def lower(spec, chain_plan: ChainPlan,
                 # here would silently ignore policy.vmem_budget (and defeat
                 # measured autotuning, which keys on the plan it timed)
                 y = ops.dwconv2d(
-                    y, p["f"], stride=st.stride, padding=st.padding,
+                    y, p["f"].astype(sdt), stride=st.stride,
+                    padding=st.padding,
                     impl=impl, interpret=interpret,
                     block_c=seg.plan.block_c,
                     vmem_budget=policy.vmem_budget,
                 )
-                y = apply_epilogue(y, p.get("b"), st.activation)
-        if chain_plan.residual and not chain_plan.residual_fused:
-            y = y + res
+                y = apply_epilogue(y, _cast(p.get("b"), sdt), st.activation)
+                if last:
+                    y = y.astype(k_out)
+        if sep_res:
+            y = (y + res).astype(odt)
         return y
 
     return run

@@ -59,23 +59,28 @@ def dwconv2d(
     interpret: bool = False,
     block_c: int | None = None,
     vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
+    out_dtype: str | None = None,
 ) -> jax.Array:
     """Depthwise 2-D conv, NHWC. x (B,Hi,Wi,C), f (Hf,Wf,C).
 
     ``block_c`` executes the kernel at an explicit channel block (the chain
     lowering passes its ``ChainSegment.plan`` here so a planned — or
     measured — ``ChainPlan`` runs verbatim); ``None`` defers to the
-    dtype-aware planner at ``vmem_budget``.
+    dtype-aware planner at ``vmem_budget``.  ``out_dtype`` (dtype NAME)
+    selects the store width of the output (DESIGN.md §7); ``None`` keeps
+    ``x.dtype``.
     """
     impl = _resolve(impl)
     if impl == "xla":
-        return ref.dwconv2d_ref(x, f, stride=stride, padding=padding)
+        y = ref.dwconv2d_ref(x, f, stride=stride, padding=padding)
+        return y if out_dtype is None else y.astype(out_dtype)
     if padding.lower() == "same":
         x = _pad_same(x, f.shape[0], f.shape[1], stride)
     elif padding.lower() != "valid":
         raise ValueError(padding)
     return dwconv2d_pallas(x, f, stride=stride, block_c=block_c,
-                           vmem_budget=vmem_budget, interpret=interpret)
+                           vmem_budget=vmem_budget, interpret=interpret,
+                           out_dtype=out_dtype)
 
 
 def dwconv1d_causal(
@@ -209,16 +214,19 @@ def pwconv(
     block_co: int | None = None,
     block_ci: int | None = None,
     vmem_budget: int = blocking.DEFAULT_VMEM_BUDGET,
+    out_dtype: str | None = None,
 ) -> jax.Array:
     """Pointwise conv / GEMM over the last axis. x (..., Ci), w (Ci, Co).
 
     Block shapes default to :func:`repro.kernels.blocking.plan_pwconv`
     (dtype-aware MXU-aligned grid, sized against ``vmem_budget``); explicit
-    overrides win.
+    overrides win.  ``out_dtype`` (dtype NAME) selects the store width of
+    the output (DESIGN.md §7); ``None`` keeps ``x.dtype``.
     """
     impl = _resolve(impl)
     if impl == "xla":
-        return ref.pwconv_ref(x, w, bias=bias, activation=activation)
+        y = ref.pwconv_ref(x, w, bias=bias, activation=activation)
+        return y if out_dtype is None else y.astype(out_dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if block_g is None or block_co is None or block_ci is None:
@@ -232,6 +240,6 @@ def pwconv(
         x2, w, bias,
         activation=activation,
         block_g=block_g, block_co=block_co, block_ci=block_ci,
-        interpret=interpret,
+        interpret=interpret, out_dtype=out_dtype,
     )
     return y.reshape(*lead, w.shape[1])

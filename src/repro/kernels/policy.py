@@ -23,6 +23,69 @@ import jax
 from repro.kernels.blocking import DEFAULT_VMEM_BUDGET
 
 
+#: Dtype names a DtypePolicy may stream/store at (narrow enough to matter,
+#: wide enough that fp32 accumulation recovers the precision).
+STREAMABLE_DTYPES = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Per-segment mixed-precision STREAMING policy (DESIGN.md §7).
+
+    The paper's ops are memory-bound, so the width at which operands move
+    HBM<->VMEM is a first-order performance knob.  This policy names it
+    explicitly, per chain segment:
+
+    * ``stream`` — dtype name every segment's *streamed* operands move at:
+      the activation tensors entering/leaving each kernel pass and the
+      weight/filter/bias tiles.  ``None`` keeps the native dtype of the
+      input (the legacy behavior — an fp32 model streams fp32).  With
+      ``"bfloat16"`` every streamed term of the traffic model halves while
+      **accumulators stay fp32** (the kernels already upcast per tile and
+      accumulate in fp32 VMEM scratch — ``blocking.ACC_BYTES`` — so only
+      the HBM traffic narrows, not the arithmetic).
+    * ``out`` — dtype name of the final chain/network output; ``None``
+      stores at the stream width (the next block consumes it as-is).
+      Pinning ``out="float32"`` makes the LAST kernel pass widen on store,
+      inside its epilogue — no extra elementwise cast pass over the output.
+
+    Frozen + hashable: it rides on :class:`KernelPolicy`, participates in
+    the autotune cache key (``kernels/autotune.problem_signature`` — a
+    bf16-streamed measured plan must never replay onto a native run), and
+    the chain planner budgets VMEM at the stream width
+    (``core/chain.plan``), so bf16 streaming also affords larger blocks.
+    """
+    stream: Optional[str] = None
+    out: Optional[str] = None
+
+    def __post_init__(self):
+        for name in (self.stream, self.out):
+            assert name is None or name in STREAMABLE_DTYPES, name
+
+    def stream_dtype(self, native):
+        """Dtype streamed operands move at, given the input's dtype."""
+        import jax.numpy as jnp
+        return jnp.dtype(self.stream) if self.stream else jnp.dtype(native)
+
+    def out_dtype(self, native):
+        """Dtype the final output is stored at, given the input's dtype."""
+        import jax.numpy as jnp
+        return (jnp.dtype(self.out) if self.out
+                else self.stream_dtype(native))
+
+    def signature(self) -> dict:
+        """Serialized identity for the autotune cache key (DESIGN.md §6)."""
+        return {"stream": self.stream, "out": self.out}
+
+
+#: Stream at the input's native dtype (the legacy behavior).
+NATIVE = DtypePolicy()
+
+#: The DESIGN.md §7 default for mixed-precision serving: stream activations
+#: and weights as bf16, accumulate fp32, store the network output as bf16.
+BF16_STREAM = DtypePolicy(stream="bfloat16")
+
+
 def resolve_impl(impl: str) -> str:
     """'auto' -> 'pallas' on TPU backends, 'xla' elsewhere; else pass-through.
 
@@ -59,6 +122,11 @@ class KernelPolicy:
     tune_cache: path of the on-disk JSON tune cache; ``None`` uses
     ``kernels/autotune.default_cache_path()`` ($REPRO_TUNE_CACHE or
     ~/.cache/repro/autotune.json).
+
+    dtype_policy: per-segment mixed-precision streaming (:class:`DtypePolicy`,
+    DESIGN.md §7).  The default :data:`NATIVE` streams at the input's dtype
+    — every cast the lowering inserts is then a no-op, so fp32 behavior is
+    bitwise-identical to the pre-policy code path.
     """
     impl: str = "auto"
     interpret: bool = False
@@ -69,6 +137,7 @@ class KernelPolicy:
     block_g: Optional[int] = None
     block_co: Optional[int] = None
     block_ci: Optional[int] = None
+    dtype_policy: DtypePolicy = NATIVE
 
     def resolved(self) -> str:
         return resolve_impl(self.impl)

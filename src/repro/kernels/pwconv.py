@@ -73,6 +73,7 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     jax.jit,
     static_argnames=(
         "activation", "block_g", "block_co", "block_ci", "interpret",
+        "out_dtype",
     ),
 )
 def pwconv_pallas(
@@ -85,17 +86,22 @@ def pwconv_pallas(
     block_co: int = 256,
     block_ci: int = 256,
     interpret: bool = False,
+    out_dtype: Optional[str] = None,
 ) -> jax.Array:
     """x: (G, Ci) @ w: (Ci, Co) [+ bias (Co,)] -> (G, Co), fp32 accumulate.
 
     Block sizes are multiples of the (8, 128) fp32 tile; defaults sized so
     x/w/acc tiles (3 * 256*256*4B = 768 KiB) leave VMEM room for
     double-buffering the streamed A/B tiles.
+
+    ``out_dtype`` (dtype NAME, static): store width of the single output
+    write — used by the mixed-precision chain lowering (DESIGN.md §7);
+    ``None`` stores at ``x.dtype``.  Accumulation is fp32 either way.
     """
     g, ci = x.shape
     ci2, co = w.shape
     assert ci == ci2, (x.shape, w.shape)
-    out_dtype = x.dtype
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
 
     bg = min(block_g, max(8, g))
     bco = min(block_co, max(128, co))

@@ -166,7 +166,7 @@ def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
     jax.jit,
     static_argnames=("stride", "dw_activation", "activation",
                      "expand_activation", "block_c", "block_co", "slab_h",
-                     "interpret"),
+                     "interpret", "out_dtype"),
 )
 def separable_fused_pallas(
     x: jax.Array,
@@ -185,6 +185,7 @@ def separable_fused_pallas(
     block_co: int | None = None,
     slab_h: int | None = None,
     interpret: bool = False,
+    out_dtype: Optional[str] = None,
 ) -> jax.Array:
     """Fused DW+PW block. x (B,Hi,Wi,C); dw_f (Hf,Wf,C); pw_w (C,Co)
     [+ dw_bias (C,), pw_bias (Co,), residual (B,Ho,Wo,Co)] -> (B,Ho,Wo,Co).
@@ -192,6 +193,12 @@ def separable_fused_pallas(
     With ``expand_w`` (Ci, C) the input is the RAW (B,Hi,Wi,Ci) tensor and
     the kernel runs the full 3-stage chain — bias-free PW-expand (computed
     on the fly per row slab) -> DW -> PW-project — in one pass.
+
+    ``out_dtype`` (a dtype NAME, static so it participates in the jit key)
+    selects the store width of the single output write — the mixed-precision
+    chain lowering pins the last pass of a bf16-streamed block to the
+    policy's ``out`` dtype (DESIGN.md §7); ``None`` stores at ``x.dtype``.
+    The accumulator is fp32 VMEM scratch regardless.
 
     VALID geometry — SAME padding is applied by the wrapper (ops.py /
     lowering.py).  Block shapes not given explicitly come from
@@ -201,6 +208,7 @@ def separable_fused_pallas(
     degraded path instead).
     """
     b, hi, wi, c_in = x.shape
+    odt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
     hf, wf, cf = dw_f.shape
     cw, co = pw_w.shape
     if expand_w is not None:
@@ -313,7 +321,7 @@ def separable_fused_pallas(
         dw_activation=dw_activation, activation=activation,
         has_exp=expand_w is not None, expand_activation=expand_activation,
         has_dwb=dw_bias is not None, has_pwb=pw_bias is not None,
-        has_res=residual is not None, out_dtype=x.dtype,
+        has_res=residual is not None, out_dtype=odt,
     )
     try:
         compiler_params = pltpu.CompilerParams(
@@ -332,7 +340,7 @@ def separable_fused_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, sh, wo, cob),
                                lambda i, s, j, k: (i, s, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho_p, wo, cop), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, ho_p, wo, cop), odt),
         scratch_shapes=[pltpu.VMEM((sh * wo, cob), jnp.float32)],
         compiler_params=compiler_params,
         interpret=interpret,

@@ -157,3 +157,25 @@ def chunked_cross_entropy(
     if z_loss:
         nll_sum = nll_sum + z_loss * zsum
     return nll_sum, n_tok
+
+
+# ---------------------------------------------------------------------------
+# Separable-conv backbones (the paper's workload, network-level)
+# ---------------------------------------------------------------------------
+# Thin model-layer wrappers over the whole-network chain engine
+# (core/network.py, DESIGN.md §7): the backbone plans once and runs as ONE
+# jitted call; mixed-precision streaming rides the policy's DtypePolicy.
+
+def init_backbone(key, net, dtype=jnp.float32) -> dict:
+    """Params for a declared separable backbone (a ``core.NetworkSpec``,
+    e.g. ``mobilenet_v2_spec()``)."""
+    from repro.core import network as _network
+    return {"blocks": _network.init_network(key, net, dtype)}
+
+
+def backbone(p, x: jax.Array, *, net,
+             policy: KernelPolicy = DEFAULT_POLICY) -> jax.Array:
+    """Run a declared separable-conv backbone end to end: every block's
+    ChainPlan resolved once, the whole network as one jitted call."""
+    from repro.core import network as _network
+    return _network.execute_network(net, p["blocks"], x, policy=policy)

@@ -15,7 +15,7 @@ import pytest
 
 from repro.core import chain
 from repro.kernels import autotune, blocking
-from repro.kernels.policy import KernelPolicy
+from repro.kernels.policy import DtypePolicy, KernelPolicy
 
 RNG = np.random.default_rng(7)
 
@@ -156,6 +156,46 @@ def test_problem_key_changes_with_shape_dtype_budget():
                                               stride=2)
     assert autotune.problem_key(other_spec, (1, 8, 8, 8), jnp.float32,
                                 pol) != base
+
+
+def test_problem_key_changes_with_dtype_policy():
+    """The dtype POLICY is part of the precision identity, not just the
+    input dtype: a bf16-streamed measured plan (budgeted at 2 B/elt) must
+    never replay onto a native fp32 run of the same problem (DESIGN.md §7)."""
+    spec, _, _ = _problem()
+    pol = KernelPolicy(impl="pallas", interpret=True, autotune=True)
+    base = autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32, pol)
+    bf = dataclasses.replace(
+        pol, dtype_policy=DtypePolicy(stream="bfloat16"))
+    key_bf = autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32, bf)
+    assert key_bf != base
+    # the out pin is a distinct problem too (different final kernel store)
+    bf_out32 = dataclasses.replace(
+        pol, dtype_policy=DtypePolicy(stream="bfloat16", out="float32"))
+    key_out = autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32, bf_out32)
+    assert key_out not in (base, key_bf)
+    # explicitly-native policy == default policy (both stream at input dtype)
+    native = dataclasses.replace(pol, dtype_policy=DtypePolicy())
+    assert autotune.problem_key(spec, (1, 8, 8, 8), jnp.float32,
+                                native) == base
+
+
+def test_bf16_streamed_entry_does_not_replay_on_native(tmp_path):
+    """End-to-end key isolation: tune under the bf16 streaming policy, then
+    a NATIVE-policy lookup of the same problem must miss."""
+    spec, params, x = _problem()
+    pol_bf = _policy(tmp_path,
+                     dtype_policy=DtypePolicy(stream="bfloat16"))
+    chain.execute(spec, params, x, policy=pol_bf)
+    raw = json.load(open(pol_bf.tune_cache))
+    (entry,) = raw["entries"].values()
+    assert entry["signature"]["dtype_policy"] == {"stream": "bfloat16",
+                                                  "out": None}
+    # budgeted at the stream width: the persisted plan says 2 bytes/elt
+    assert entry["plan"]["dtype_bytes"] == 2
+    pol_native = _policy(tmp_path)
+    assert autotune.lookup_cached_plan(spec, x.shape, x.dtype,
+                                       pol_native) is None
 
 
 def test_distinct_problems_get_distinct_entries(tmp_path):

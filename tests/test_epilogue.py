@@ -1,0 +1,83 @@
+"""kernels/epilogue.apply_epilogue: every activation x {fp32, bf16} x
+{bias, bias-free} against independent numpy formulas, dtype preservation,
+the 0 -> 0 property the fused expand path relies on, and the unknown-
+activation error path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.epilogue import ACTIVATIONS, apply_epilogue
+
+RNG = np.random.default_rng(11)
+
+
+def _expected(y: np.ndarray, bias, activation) -> np.ndarray:
+    """Independent fp64 numpy reimplementation (gelu = the tanh
+    approximation jax.nn.gelu defaults to)."""
+    y = y.astype(np.float64)
+    if bias is not None:
+        y = y + bias.astype(np.float64)
+    if activation is None:
+        return y
+    if activation == "relu":
+        return np.maximum(y, 0.0)
+    if activation == "relu6":
+        return np.clip(y, 0.0, 6.0)
+    if activation == "gelu":
+        c = np.sqrt(2.0 / np.pi)
+        return 0.5 * y * (1.0 + np.tanh(c * (y + 0.044715 * y ** 3)))
+    if activation == "silu":
+        return y / (1.0 + np.exp(-y))
+    raise AssertionError(activation)
+
+
+@pytest.mark.parametrize("activation", list(ACTIVATIONS) + [None])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_bias", [True, False])
+def test_epilogue_matches_numpy(activation, dtype, with_bias):
+    y = RNG.normal(size=(3, 5, 8), scale=3.0).astype(np.float32)
+    b = RNG.normal(size=(8,)).astype(np.float32) if with_bias else None
+    yj = jnp.asarray(y).astype(dtype)
+    bj = jnp.asarray(b) if b is not None else None  # fp32 bias, bf16 y:
+    got = apply_epilogue(yj, bj, activation)        # cast happens inside
+    assert got.dtype == jnp.dtype(dtype)            # dtype preserved
+
+    # expected on the ROUNDED inputs (what the kernel actually consumes)
+    yr = np.asarray(jnp.asarray(y).astype(dtype), np.float32)
+    br = (np.asarray(jnp.asarray(b).astype(dtype), np.float32)
+          if b is not None else None)
+    want = _expected(yr, br, activation)
+    tol = 1e-6 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_every_activation_maps_zero_to_zero(activation, dtype):
+    """The property the fused expand-on-the-fly kernel relies on: zero
+    SAME-padding pixels stay exactly zero through a bias-free epilogue."""
+    z = jnp.zeros((4, 4), dtype)
+    out = apply_epilogue(z, None, activation)
+    assert np.asarray(out, np.float32).max() == 0.0
+    assert np.asarray(out, np.float32).min() == 0.0
+
+
+def test_bias_only_is_plain_add():
+    y = jnp.asarray(RNG.normal(size=(2, 8)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(8,)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(apply_epilogue(y, b, None)),
+                                  np.asarray(y + b))
+
+
+def test_relu6_clips_both_sides():
+    y = jnp.asarray(np.array([-3.0, 0.0, 3.0, 6.0, 9.0], np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(apply_epilogue(y, None, "relu6")),
+        np.array([0.0, 0.0, 3.0, 6.0, 6.0], np.float32))
+
+
+def test_unknown_activation_raises():
+    y = jnp.zeros((2, 2))
+    with pytest.raises(ValueError, match="unknown activation"):
+        apply_epilogue(y, None, "swishish")

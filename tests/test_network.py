@@ -1,0 +1,282 @@
+"""Whole-network chain engine (core/network.py, DESIGN.md §7): backbone
+specs, one-shot planning, single-jit execution, per-segment mixed-precision
+streaming, traffic ordering, and the network-level tune cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chain, network
+from repro.core import intensity as it
+from repro.kernels.policy import DtypePolicy, KernelPolicy
+
+BF16_REL_TOL = 5e-2  # documented in DESIGN.md §7 and examples/
+
+XLA = KernelPolicy(impl="xla")
+PAL = KernelPolicy(impl="pallas", interpret=True)
+
+
+def _tiny_net(c_in=8):
+    """A 3-block mixed net (V1-style block, inverted residual, t=1 block)
+    small enough for interpret-mode pallas."""
+    return network.NetworkSpec(name="tiny", c_in=c_in, blocks=(
+        chain.separable_block_spec(16, stride=1),
+        chain.inverted_residual_spec(16, 16, expand=2, stride=1),
+        chain.SeparableSpec(stages=(
+            chain.DW(stride=2, activation="relu6"),
+            chain.PW(24),
+        ), residual="auto"),
+    ))
+
+
+def _run_blocks(net, params, x, policy):
+    """The pre-network-engine oracle: a Python loop of chain.execute."""
+    for spec, p in zip(net.blocks, params):
+        x = chain.execute(spec, p, x, policy=policy)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+def test_mobilenet_v1_spec_geometry():
+    net = network.mobilenet_v1_spec()
+    assert net.n_blocks == 13
+    assert net.c_in == 32
+    assert net.out_channels() == 1024
+    assert net.stride_product() == 16  # 4 stride-2 DWs in the body
+    assert all(len(b.stages) == 2 for b in net.blocks)
+
+
+def test_mobilenet_v2_spec_geometry():
+    net = network.mobilenet_v2_spec()
+    assert net.n_blocks == sum(n for _, _, n, _ in network.MOBILENET_V2_BODY)
+    assert net.n_blocks == 17
+    assert net.c_in == 32
+    assert net.out_channels() == 320
+    # first (t=1) row has no expansion GEMM; every other block is 3-stage
+    assert len(net.blocks[0].stages) == 2
+    assert all(len(b.stages) == 3 for b in net.blocks[1:])
+
+
+def test_width_mult_rounds_to_multiple_of_8():
+    net = network.mobilenet_v2_spec(width_mult=0.75)
+    assert net.c_in == 24
+    c = net.c_in
+    for b in net.blocks:
+        c = b.out_channels(c)
+        assert c % 8 == 0
+    assert net.name == "mobilenet_v2_0.75"
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def test_v2_network_plans_every_block_single_pass():
+    net = network.mobilenet_v2_spec()
+    for dp in (DtypePolicy(), DtypePolicy(stream="bfloat16")):
+        nplan = network.plan_network(
+            net, (1, 112, 112, net.c_in),
+            policy=KernelPolicy(dtype_policy=dp))
+        assert nplan.fully_fused
+        assert nplan.n_kernel_passes == net.n_blocks
+        histo = nplan.segment_histogram()
+        assert histo == {"fused2": 1, "fused3": 16}
+        # every inverted residual -> the 3-stage fused kernel
+        for spec, p in zip(net.blocks, nplan.plans):
+            if len(spec.stages) == 3:
+                assert p.segments[0].kind == "fused3"
+
+
+def test_plan_walks_shapes_and_dtypes():
+    net = _tiny_net()
+    pol = KernelPolicy(dtype_policy=DtypePolicy(stream="bfloat16",
+                                                out="float32"))
+    nplan = network.plan_network(net, (2, 16, 16, 8), policy=pol)
+    assert nplan.block_shapes == ((2, 16, 16, 8), (2, 16, 16, 16),
+                                  (2, 16, 16, 16))
+    assert nplan.out_shape == (2, 8, 8, 24)
+    # inner handoffs happen at the stream width; only the last block's
+    # policy keeps the out pin (resolve_block_policies broadcast rule)
+    assert nplan.block_dtypes == ("float32", "bfloat16", "bfloat16")
+    pols = network.resolve_block_policies(net, pol)
+    assert [p.dtype_policy.out for p in pols] == [None, None, "float32"]
+    # bf16-budgeted plans: stream width drives dtype_bytes
+    assert all(p.dtype_bytes == 2 for p in nplan.plans)
+
+
+def test_network_key_sensitivity():
+    net = _tiny_net()
+    shape = (1, 16, 16, 8)
+    k = network.network_key(net, shape, jnp.float32, XLA)
+    k_bf = network.network_key(
+        net, shape, jnp.float32,
+        dataclasses.replace(XLA,
+                            dtype_policy=DtypePolicy(stream="bfloat16")))
+    k_shape = network.network_key(net, (1, 32, 32, 8), jnp.float32, XLA)
+    other = dataclasses.replace(net, blocks=net.blocks[:2])
+    k_spec = network.network_key(other, shape, jnp.float32, XLA)
+    assert len({k, k_bf, k_shape, k_spec}) == 4
+    assert all(s.startswith("net:") for s in (k, k_bf, k_shape, k_spec))
+
+
+def test_plan_called_once_per_block(monkeypatch):
+    """execute_network memoizes (plan, jitted fn): two calls -> exactly
+    n_blocks chain.plan invocations and ONE trace."""
+    net = _tiny_net()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    network.clear_network_cache()
+
+    plan_calls = []
+    real_plan = chain.plan
+    monkeypatch.setattr(network.chain, "plan",
+                        lambda *a, **k: (plan_calls.append(1),
+                                         real_plan(*a, **k))[1])
+    traces = []
+    real_build = network.build_network_fn
+
+    def counting_build(*a, **k):
+        run = real_build(*a, **k)
+
+        def wrapped(params, x):
+            traces.append(1)  # appended only at trace time under jit
+            return run(params, x)
+        return wrapped
+
+    monkeypatch.setattr(network, "build_network_fn", counting_build)
+
+    y1 = network.execute_network(net, params, x, policy=XLA)
+    y2 = network.execute_network(net, params, x, policy=XLA)
+    assert len(plan_calls) == net.n_blocks
+    assert len(traces) == 1
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ---------------------------------------------------------------------------
+# execution parity
+# ---------------------------------------------------------------------------
+
+def test_fp32_network_bitwise_vs_per_block_loop():
+    net = network.mobilenet_v1_spec()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, net.c_in))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    got = network.execute_network(net, params, x, policy=XLA)
+    ref = _run_blocks(net, params, x, XLA)
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("make_spec,res", [
+    (network.mobilenet_v1_spec, 8),
+    (network.mobilenet_v2_spec, 16),
+])
+def test_bf16_network_parity_vs_fp32_oracle(make_spec, res):
+    net = make_spec()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, res, res, net.c_in))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    pol = KernelPolicy(dtype_policy=DtypePolicy(stream="bfloat16"))
+    got = network.execute_network(
+        net, network.cast_network_params(params, jnp.bfloat16), x,
+        policy=pol)
+    assert got.dtype == jnp.bfloat16
+    ref = np.asarray(_run_blocks(net, params, x, XLA), np.float32)
+    rel = np.abs(np.asarray(got, np.float32) - ref).max() / np.abs(ref).max()
+    assert rel < BF16_REL_TOL, rel
+
+
+def test_out_pin_restores_fp32_at_network_output():
+    net = _tiny_net()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    pol = KernelPolicy(dtype_policy=DtypePolicy(stream="bfloat16",
+                                                out="float32"))
+    y = network.execute_network(net, params, x, policy=pol)
+    assert y.dtype == jnp.float32
+    ref = np.asarray(_run_blocks(net, params, x, XLA), np.float32)
+    rel = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
+    assert rel < BF16_REL_TOL, rel
+
+
+def test_per_block_dtype_policies():
+    """Mixed per-block precision: first block fp32, rest bf16-streamed."""
+    net = _tiny_net()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    dps = (DtypePolicy(),
+           DtypePolicy(stream="bfloat16"),
+           DtypePolicy(stream="bfloat16", out="float32"))
+    nplan = network.plan_network(net, x.shape, policy=XLA,
+                                 block_dtype_policies=dps)
+    assert [p.dtype_bytes for p in nplan.plans] == [4, 2, 2]
+    assert nplan.block_dtypes == ("float32", "float32", "bfloat16")
+    y = network.execute_network(net, params, x, policy=XLA,
+                                block_dtype_policies=dps)
+    assert y.dtype == jnp.float32
+    ref = np.asarray(_run_blocks(net, params, x, XLA), np.float32)
+    rel = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
+    assert rel < BF16_REL_TOL, rel
+
+
+def test_pallas_interpret_matches_xla():
+    net = _tiny_net()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    got = network.execute_network(net, params, x, policy=PAL)
+    ref = network.execute_network(net, params, x, policy=XLA)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# traffic model
+# ---------------------------------------------------------------------------
+
+def test_network_traffic_ordering_bf16_fp32_unfused():
+    for net in (network.mobilenet_v1_spec(), network.mobilenet_v2_spec()):
+        shape = (1, 56, 56, net.c_in)
+        t32 = it.network_traffic(
+            net, network.plan_network(net, shape, policy=KernelPolicy()))
+        tbf = it.network_traffic(
+            net, network.plan_network(
+                net, shape, policy=KernelPolicy(
+                    dtype_policy=DtypePolicy(stream="bfloat16"))))
+        tunf = it.network_traffic(
+            net, network.plan_network(net, shape,
+                                      policy=KernelPolicy(fused=False)))
+        assert tbf.bytes_hbm < t32.bytes_hbm < tunf.bytes_hbm
+        assert tbf.flops == t32.flops  # dtype streaming moves bytes only
+
+
+# ---------------------------------------------------------------------------
+# network-level tune cache
+# ---------------------------------------------------------------------------
+
+def test_tune_network_then_replay(tmp_path):
+    net = network.NetworkSpec(name="tune2", c_in=8, blocks=(
+        chain.separable_block_spec(8),
+        chain.inverted_residual_spec(8, 8, expand=2),
+    ))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    pol = KernelPolicy(impl="pallas", interpret=True, autotune=True,
+                       tune_cache=str(tmp_path / "tune.json"))
+    r1 = network.tune_network(net, params, x, policy=pol, repeats=1)
+    assert not r1.cache_hit and r1.n_measured > 0
+    r2 = network.tune_network(net, params, x, policy=pol, repeats=1)
+    assert r2.cache_hit and r2.n_measured == 0
+    assert r2.plan == r1.plan
+    # plan_network consults the same network entry
+    replay = network.plan_network(net, x.shape, policy=pol)
+    assert replay == r1.plan
+    # execution with the tuned plan matches the untuned path
+    network.clear_network_cache()
+    got = network.execute_network(net, params, x, policy=pol)
+    ref = network.execute_network(
+        net, params, x, policy=dataclasses.replace(pol, autotune=False))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
