@@ -140,7 +140,10 @@ def main() -> None:
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump(results, f, indent=2, default=str)
+            # sorted keys + trailing newline: byte-stable across runs with
+            # identical results, so CI artifacts diff cleanly
+            json.dump(results, f, indent=2, default=str, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,7 @@ execute_network call, DESIGN.md §7) with per-segment mixed-precision
 streaming.
 
   PYTHONPATH=src python examples/mobilenet_inference.py \
-      [--pallas] [--res N] [--dtype fp32|bf16] [--arch v1|v2|both]
+      [--pallas] [--res N] [--dtype fp32|bf16] [--arch v1|v2|both] [--verify]
 
 --dtype bf16 streams activations and weights as bf16 while every kernel
 accumulates in fp32 (the DtypePolicy of DESIGN.md §7) — the modeled HBM
@@ -54,6 +54,14 @@ def run_network(name, net, args):
         params = network.cast_network_params(params, jnp.bfloat16)
 
     nplan = network.plan_network(net, x.shape, policy=pol)
+    if args.verify:
+        from repro import analysis
+        report = analysis.analyze_network(net, nplan, policy=pol,
+                                          jaxpr=False)
+        print(f"  planlint: {report.summary()}"
+              + ("" if report.ok else
+                 " -> " + ",".join(report.rules(analysis.ERROR))))
+        analysis.verify_or_raise(report)
     histo = ",".join(f"{k}:{v}"
                      for k, v in sorted(nplan.segment_histogram().items()))
     print(f"\n{name} body @{res}x{res} ({args.dtype}, {pol.impl}"
@@ -120,6 +128,10 @@ def main():
                     help="streaming dtype policy: bf16 halves the streamed "
                          "HBM bytes, accumulation stays fp32 (DESIGN.md §7)")
     ap.add_argument("--arch", choices=("v1", "v2", "both"), default="both")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the static plan verifier (repro.analysis, "
+                         "DESIGN.md §8) on the resolved NetworkPlan before "
+                         "executing; raises on any error diagnostic")
     args = ap.parse_args()
 
     nets = []

@@ -1,0 +1,140 @@
+"""``python -m repro.analysis`` — the CI planlint sweep (DESIGN.md §8).
+
+Plans and statically verifies every benchmarked geometry
+(``benchmarks/layers.py``: the separable-block suites incl. the
+high-resolution slabbed blocks, and the whole inverted residuals) plus the
+full MobileNetV1/V2 network plans under BOTH dtype policies (native fp32
+and bf16 streaming), then prints the diagnostics summary and exits 1 on
+any error-severity finding.  ``--json PATH`` writes the structured report
+(sorted keys, trailing newline — stable diffs) for the CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+
+from repro import analysis
+from repro.analysis.diagnostics import Report
+from repro.core import chain, network
+from repro.kernels.policy import BF16_STREAM, NATIVE, KernelPolicy
+
+
+def _bench_layers():
+    """Import benchmarks/layers.py from the repo root; None when the
+    benchmarks tree is not present (installed-package use)."""
+    try:
+        from benchmarks import layers
+        return layers
+    except ImportError:
+        pass
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    sys.path.insert(0, root)
+    try:
+        from benchmarks import layers
+        return layers
+    except ImportError:
+        return None
+
+
+def _policies() -> dict:
+    """The two CI dtype policies, on the Pallas interpret path so the jaxpr
+    audit sees the real kernel lowering structure on any host."""
+    base = KernelPolicy(impl="pallas", interpret=True)
+    import dataclasses
+    return {
+        "fp32": base,
+        "bf16": dataclasses.replace(base, dtype_policy=BF16_STREAM),
+    }
+
+
+def sweep(batch: int = 1, res: int = 112, jaxpr: bool = True,
+          verbose: bool = False) -> Report:
+    report = Report()
+    policies = _policies()
+    layers = _bench_layers()
+
+    def run(label, spec, shape, dtype, pol):
+        cp = chain.plan(spec, shape, dtype=dtype, policy=pol)
+        r = analysis.analyze_chain(spec, cp, shape, dtype=dtype, policy=pol,
+                                   label=label, jaxpr=jaxpr)
+        report.extend(r.diagnostics)
+        status = "ok" if r.ok else "FAIL " + ",".join(r.rules("error"))
+        print(f"  {label:44s} {status}")
+        if verbose and r.diagnostics:
+            print(r.format())
+
+    if layers is not None:
+        for pname, pol in policies.items():
+            print(f"# separable-block suites ({pname})")
+            for suite, blocks in layers.SEP_SUITES.items():
+                for blk in blocks:
+                    spec = chain.separable_block_spec(blk.c_out,
+                                                      stride=blk.stride,
+                                                      hf=blk.hf)
+                    run(f"sep/{suite}/{blk.name}/{pname}", spec,
+                        (batch, blk.h, blk.w, blk.c_in), jnp.float32, pol)
+            print(f"# inverted residuals ({pname})")
+            for ir in layers.MOBILENET_V2_IR:
+                spec = chain.inverted_residual_spec(
+                    ir.c_in, ir.c_out, expand=ir.expand, stride=ir.stride,
+                    hf=ir.hf)
+                run(f"ir/{ir.name}/{pname}", spec,
+                    (batch, ir.h, ir.h, ir.c_in), jnp.float32, pol)
+    else:
+        print("# benchmarks/layers.py not importable — network plans only")
+
+    for pname, pol in policies.items():
+        for net in (network.mobilenet_v1_spec(),
+                    network.mobilenet_v2_spec()):
+            label = f"network/{net.name}/res{res}/{pname}"
+            nplan = network.plan_network(
+                net, (batch, res, res, net.c_in), dtype=jnp.float32,
+                policy=pol)
+            r = analysis.analyze_network(net, nplan, policy=pol,
+                                         jaxpr=jaxpr)
+            report.extend(r.diagnostics)
+            status = "ok" if r.ok else "FAIL " + ",".join(r.rules("error"))
+            print(f"  {label:44s} {status}  ({nplan.n_blocks} blocks, "
+                  f"{nplan.n_kernel_passes} passes)")
+            if verbose and r.diagnostics:
+                print(r.format())
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan/kernel verifier over benchmarked "
+                    "geometries and full network plans.")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--res", type=int, default=112,
+                    help="network-plan input resolution (default 112)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the structured report here")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the (slower) traced-jaxpr audits")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every diagnostic, not just failures")
+    args = ap.parse_args(argv)
+
+    report = sweep(batch=args.batch, res=args.res,
+                   jaxpr=not args.no_jaxpr, verbose=args.verbose)
+    print(report.format(max_lines=None if args.verbose else 40))
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

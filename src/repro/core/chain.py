@@ -215,7 +215,7 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     if policy.autotune:
         cached = autotune.lookup_cached_plan(spec, x_shape, dtype, policy)
         if cached is not None:
-            return cached
+            return _maybe_verify(spec, cached, x_shape, policy)
     b, h, w, c = x_shape
     dtype = policy.dtype_policy.stream_dtype(dtype)
     stages = spec.stages
@@ -284,13 +284,27 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     residual_fused = bool(
         res_active and segments
         and segments[-1].kind in ("fused3", "fused2"))
-    return ChainPlan(
+    cp = ChainPlan(
         segments=tuple(segments),
         residual=res_active,
         residual_fused=residual_fused,
         dtype_bytes=nb,
         vmem_budget=budget,
     )
+    return _maybe_verify(spec, cp, x_shape, policy)
+
+
+def _maybe_verify(spec: SeparableSpec, cp: ChainPlan, x_shape,
+                  policy: KernelPolicy) -> ChainPlan:
+    """The ``policy.verify`` debug knob (DESIGN.md §8): run the static
+    analyzer (planlint + mosaic rules — the cheap, trace-free passes) on
+    the resolved plan and raise on any error diagnostic.  Lazy import:
+    the analysis layer imports this module's consumers."""
+    if policy.verify:
+        from repro import analysis
+        analysis.verify_or_raise(analysis.analyze_chain(
+            spec, cp, x_shape, policy=policy, jaxpr=False))
+    return cp
 
 
 # ---------------------------------------------------------------------------
@@ -317,10 +331,16 @@ def execute(spec: SeparableSpec, params: Sequence[dict], x: jax.Array, *,
         if policy.autotune:
             base = plan(spec, x.shape, dtype=x.dtype,
                         policy=dataclasses.replace(policy, autotune=False))
-            chain_plan = autotune.autotune_chain(
-                spec, params, x, policy=policy, base_plan=base).plan
+            chain_plan = _maybe_verify(
+                spec, autotune.autotune_chain(
+                    spec, params, x, policy=policy, base_plan=base).plan,
+                x.shape, policy)
         else:
             chain_plan = plan(spec, x.shape, dtype=x.dtype, policy=policy)
+    else:
+        # an explicitly supplied plan bypasses plan() — verify it here so
+        # the debug knob also gates hand-built / deserialized plans
+        _maybe_verify(spec, chain_plan, x.shape, policy)
     return lower(spec, chain_plan, policy)(params, x)
 
 

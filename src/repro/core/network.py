@@ -36,6 +36,7 @@ import collections
 import dataclasses
 import hashlib
 import json
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -279,18 +280,55 @@ def plan_network(net: NetworkSpec, x_shape, *, dtype=jnp.float32,
     key = network_key(net, x_shape, dtype, policy, block_dtype_policies)
     if policy.autotune:
         cached = _lookup_network_entry(key, policy)
-        if cached is not None:
-            return cached
-    plans = tuple(
-        chain.plan(spec, shape, dtype=jnp.dtype(dt), policy=pol)
-        for spec, (shape, dt), pol in zip(net.blocks, problems, policies))
-    return NetworkPlan(
-        plans=plans,
+        if cached is not None and _validate_network_entry(net, cached,
+                                                          policy):
+            return _maybe_verify_network(net, cached, policy,
+                                         block_dtype_policies)
+    nplan = NetworkPlan(
+        plans=tuple(
+            chain.plan(spec, shape, dtype=jnp.dtype(dt), policy=pol)
+            for spec, (shape, dt), pol in zip(net.blocks, problems,
+                                              policies)),
         block_shapes=tuple(shape for shape, _ in problems),
         block_dtypes=tuple(dt for _, dt in problems),
         out_shape=out_shape,
         key=key,
     )
+    return _maybe_verify_network(net, nplan, policy, block_dtype_policies)
+
+
+def _validate_network_entry(net: NetworkSpec, nplan: NetworkPlan,
+                            policy: KernelPolicy) -> bool:
+    """Replayed whole-network cache entries must pass planlint block-wise
+    before executing verbatim (DESIGN.md §8); a stale entry is dropped
+    with a warning (and the caller re-plans), never executed or crashed
+    on.  Lazy import: analysis sits above this module."""
+    from repro.analysis import lint_cached_plan
+    path = policy.tune_cache or autotune.default_cache_path()
+    for i, (spec, cp, shape) in enumerate(zip(net.blocks, nplan.plans,
+                                              nplan.block_shapes)):
+        rules = lint_cached_plan(spec, cp, shape,
+                                 label=f"net-cache/block{i}")
+        if rules is not None:
+            warnings.warn(
+                f"dropping network tune-cache entry {nplan.key} from "
+                f"{path}: block {i} failed planlint ({rules}); "
+                "re-planning analytically", stacklevel=3)
+            return False
+    return True
+
+
+def _maybe_verify_network(net: NetworkSpec, nplan: NetworkPlan,
+                          policy: KernelPolicy,
+                          block_dtype_policies=None) -> NetworkPlan:
+    """The ``policy.verify`` knob at network scope: static analyzer over
+    every block's resolved plan, raising on error diagnostics."""
+    if policy.verify:
+        from repro import analysis
+        analysis.verify_or_raise(analysis.analyze_network(
+            net, nplan, policy=dataclasses.replace(policy, verify=False),
+            block_dtype_policies=block_dtype_policies, jaxpr=False))
+    return nplan
 
 
 def _serialize_network_plan(nplan: NetworkPlan) -> dict:

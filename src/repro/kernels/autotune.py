@@ -43,6 +43,7 @@ import json
 import os
 import statistics
 import time
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -216,19 +217,41 @@ class TuneCache:
         os.replace(tmp, self.path)
 
 
+def validate_cached_plan(spec, cp: ChainPlan, x_shape: Sequence[int],
+                         key: str, path: str) -> Optional[ChainPlan]:
+    """Replayed cache entries must pass planlint before executing verbatim
+    (DESIGN.md §8): an entry that became infeasible after a planner/kernel
+    change — or was hand-edited — is dropped with a warning naming the
+    cache path and the rule ids, and the caller falls back to the analytic
+    planner / re-tunes.  A stale cache is a performance artifact, never a
+    crash.  Lazy import: analysis sits above this module."""
+    from repro.analysis import lint_cached_plan
+    rules = lint_cached_plan(spec, cp, x_shape, label=f"tune-cache[{key}]")
+    if rules is None:
+        return cp
+    warnings.warn(
+        f"dropping tune-cache entry {key} from {path}: failed planlint "
+        f"({rules}); falling back to the analytic plan (the entry is "
+        "stale — delete the cache or re-tune)",
+        stacklevel=3)
+    return None
+
+
 def lookup_cached_plan(spec, x_shape: Sequence[int], dtype,
                        policy: KernelPolicy) -> Optional[ChainPlan]:
     """Pure cache consult (no measurement): the tuned ChainPlan for this
-    problem signature, or None on a miss / undecodable entry."""
+    problem signature, or None on a miss / undecodable / planlint-rejected
+    entry."""
     path = policy.tune_cache or default_cache_path()
-    entry = TuneCache.load(path).get(problem_key(spec, x_shape, dtype,
-                                                 policy))
+    key = problem_key(spec, x_shape, dtype, policy)
+    entry = TuneCache.load(path).get(key)
     if entry is None:
         return None
     try:
-        return deserialize_chain_plan(entry["plan"])
+        cp = deserialize_chain_plan(entry["plan"])
     except (KeyError, TypeError, ValueError):
         return None
+    return validate_cached_plan(spec, cp, x_shape, key, path)
 
 
 # ---------------------------------------------------------------------------
@@ -416,13 +439,16 @@ def autotune_chain(spec, params, x, *, policy: KernelPolicy,
     if entry is not None:
         try:
             plan = deserialize_chain_plan(entry["plan"])
+        except (KeyError, TypeError, ValueError):
+            plan = None  # undecodable entry -> re-tune and overwrite
+        if plan is not None:
+            plan = validate_cached_plan(spec, plan, x.shape, key, path)
+        if plan is not None:
             return AutotuneResult(
                 plan=plan, cache_hit=True,
                 measured_us=float(entry.get("measured_us", 0.0)),
                 analytic_us=float(entry.get("analytic_us", 0.0)),
                 n_measured=0, key=key, cache_path=path)
-        except (KeyError, TypeError, ValueError):
-            pass  # undecodable entry -> re-tune and overwrite
 
     def timed(cp: ChainPlan) -> float:
         run = lowering.lower(spec, cp, policy)

@@ -31,6 +31,34 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import blocking
+from repro.kernels.gridspec import (BlockRef, KernelModel,
+                                    in_specs_from_model,
+                                    out_spec_from_model)
+
+
+def dw_kernel_model(*, b: int, hiu: int, wiu: int, ho: int, wo: int, c: int,
+                    block_c: int, hf: int, wf: int, itemsize: int,
+                    out_itemsize: int) -> KernelModel:
+    """The exact grid/BlockSpec geometry ``dwconv2d_pallas`` lowers to —
+    consumed by both the kernel and the static analyzer (DESIGN.md §8).
+    ``hiu``/``wiu`` are the input rows/cols actually consumed; shapes are
+    the channel-padded shapes handed to ``pl.pallas_call``."""
+    cb = block_c
+    cp = c + (-c) % cb
+    return KernelModel(
+        name="dwconv2d",
+        grid=(b, cp // cb),
+        dimension_semantics=("parallel", "parallel"),
+        inputs=(
+            BlockRef("x", (b, hiu, wiu, cp), (1, hiu, wiu, cb),
+                     lambda i, j: (i, 0, 0, j), itemsize),
+            BlockRef("f", (hf, wf, cp), (hf, wf, cb),
+                     lambda i, j: (0, 0, j), itemsize),
+        ),
+        output=BlockRef("out", (b, ho, wo, cp), (1, ho, wo, cb),
+                        lambda i, j: (i, 0, 0, j), out_itemsize),
+        value_bytes=ho * wo * cb * 4,              # fp32 jnp accumulator
+    )
 
 
 def _dw2d_kernel(x_ref, f_ref, out_ref, *, hf: int, wf: int, stride: int,
@@ -99,27 +127,34 @@ def dwconv2d_pallas(
     wiu = (wo - 1) * stride + wf
     x = x[:, :hiu, :wiu, :]
 
+    # Grid and BlockSpecs come from the kernel model — the same object the
+    # static analyzer (repro.analysis) checks (DESIGN.md §8).
+    model = dw_kernel_model(
+        b=b, hiu=hiu, wiu=wiu, ho=ho, wo=wo, c=c, block_c=cb, hf=hf, wf=wf,
+        itemsize=x.dtype.itemsize, out_itemsize=odt.itemsize,
+    )
+    for arr, br in zip((x, f), model.inputs):
+        assert arr.shape == br.array_shape, (br.name, arr.shape,
+                                             br.array_shape)
+
     kernel = functools.partial(
         _dw2d_kernel, hf=hf, wf=wf, stride=stride, out_dtype=odt
     )
     try:
         compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")
+            dimension_semantics=model.dimension_semantics
         )
     except AttributeError:
         compiler_params = pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel")
+            dimension_semantics=model.dimension_semantics
         )
 
     out = pl.pallas_call(
         kernel,
-        grid=(b, cp // cb),
-        in_specs=[
-            pl.BlockSpec((1, hiu, wiu, cb), lambda i, j: (i, 0, 0, j)),
-            pl.BlockSpec((hf, wf, cb), lambda i, j: (0, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, ho, wo, cb), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cp), odt),
+        grid=model.grid,
+        in_specs=in_specs_from_model(model),
+        out_specs=out_spec_from_model(model),
+        out_shape=jax.ShapeDtypeStruct(model.output.array_shape, odt),
         compiler_params=compiler_params,
         interpret=interpret,
     )(x, f)

@@ -119,6 +119,15 @@ class KernelPolicy:
     on a miss, measure the candidate ladder on the first ``execute`` call
     (the winner is persisted, so later runs replay it without measuring).
     ``False`` (default) keeps today's analytic planner.
+
+    verify: the static-verification debug knob (repro.analysis, DESIGN.md
+    §8).  ``True`` makes ``core/chain.plan`` / ``execute`` /
+    ``core/network.plan_network`` run the static analyzer (planlint +
+    mosaic rules) on every resolved plan and raise
+    ``analysis.PlanVerificationError`` on any error-severity diagnostic —
+    an infeasible or corrupted plan then fails at plan time with rule ids,
+    not on hardware as a Mosaic lowering error.  ``False`` (default) keeps
+    verification to the CI sweep (``python -m repro.analysis``).
     tune_cache: path of the on-disk JSON tune cache; ``None`` uses
     ``kernels/autotune.default_cache_path()`` ($REPRO_TUNE_CACHE or
     ~/.cache/repro/autotune.json).
@@ -133,6 +142,7 @@ class KernelPolicy:
     vmem_budget: int = DEFAULT_VMEM_BUDGET
     fused: Optional[bool] = None
     autotune: bool = False
+    verify: bool = False
     tune_cache: Optional[str] = None
     block_g: Optional[int] = None
     block_co: Optional[int] = None

@@ -28,6 +28,49 @@ from jax.experimental.pallas import tpu as pltpu
 # Shared bias+activation tail (kernels/epilogue.py) — the same jnp ops trace
 # inside the kernel body; `_epilogue` stays as an alias for old call sites.
 from repro.kernels.epilogue import apply_epilogue as _epilogue
+from repro.kernels.gridspec import (BlockRef, KernelModel,
+                                    in_specs_from_model,
+                                    out_spec_from_model)
+
+
+def pw_clamp_blocks(g: int, ci: int, co: int, block_g: int, block_co: int,
+                    block_ci: int) -> tuple[int, int, int]:
+    """Clamp requested block sizes to the problem (never below the fp32
+    (8, 128) tile) — the kernel and the analyzer apply the same rule."""
+    bg = min(block_g, max(8, g))
+    bco = min(block_co, max(128, co))
+    bci = min(block_ci, max(128, ci))
+    return bg, bco, bci
+
+
+def pw_kernel_model(*, g: int, ci: int, co: int, bg: int, bci: int, bco: int,
+                    has_bias: bool, itemsize: int,
+                    out_itemsize: int) -> KernelModel:
+    """The exact grid/BlockSpec geometry ``pwconv_pallas`` lowers to at the
+    (already clamped) blocks — consumed by both the kernel and the static
+    analyzer (DESIGN.md §8).  Shapes are the padded shapes handed to
+    ``pl.pallas_call``."""
+    gp = g + (-g) % bg
+    cip = ci + (-ci) % bci
+    cop = co + (-co) % bco
+    inputs = [
+        BlockRef("x", (gp, cip), (bg, bci),
+                 lambda i, j, k: (i, k), itemsize),
+        BlockRef("w", (cip, cop), (bci, bco),
+                 lambda i, j, k: (k, j), itemsize),
+    ]
+    if has_bias:
+        inputs.append(BlockRef("bias", (1, cop), (1, bco),
+                               lambda i, j, k: (0, j), itemsize))
+    return KernelModel(
+        name="pwconv",
+        grid=(gp // bg, cop // bco, cip // bci),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        inputs=tuple(inputs),
+        output=BlockRef("out", (gp, cop), (bg, bco),
+                        lambda i, j, k: (i, j), out_itemsize),
+        scratch_bytes=bg * bco * 4,                # fp32 accumulator
+    )
 
 
 def _rtrd_kernel(*refs, nk: int, activation, out_dtype):
@@ -103,9 +146,7 @@ def pwconv_pallas(
     assert ci == ci2, (x.shape, w.shape)
     out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
 
-    bg = min(block_g, max(8, g))
-    bco = min(block_co, max(128, co))
-    bci = min(block_ci, max(128, ci))
+    bg, bco, bci = pw_clamp_blocks(g, ci, co, block_g, block_co, block_ci)
 
     xp = _pad_to(_pad_to(x, 0, bg), 1, bci)
     wp = _pad_to(_pad_to(w, 0, bci), 1, bco)
@@ -113,34 +154,37 @@ def pwconv_pallas(
     cop = wp.shape[1]
     nk = cip // bci
 
-    in_specs = [
-        pl.BlockSpec((bg, bci), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bci, bco), lambda i, j, k: (k, j)),
-    ]
+    # Grid and BlockSpecs come from the kernel model — the same object the
+    # static analyzer (repro.analysis) checks (DESIGN.md §8).
+    model = pw_kernel_model(
+        g=g, ci=ci, co=co, bg=bg, bci=bci, bco=bco, has_bias=bias is not None,
+        itemsize=x.dtype.itemsize, out_itemsize=out_dtype.itemsize,
+    )
     inputs = [xp, wp]
     if bias is not None:
-        bp = _pad_to(bias.reshape(1, -1), 1, bco)
-        in_specs.append(pl.BlockSpec((1, bco), lambda i, j, k: (0, j)))
-        inputs.append(bp)
+        inputs.append(_pad_to(bias.reshape(1, -1), 1, bco))
+    for arr, br in zip(inputs, model.inputs):
+        assert arr.shape == br.array_shape, (br.name, arr.shape,
+                                             br.array_shape)
 
     kernel = functools.partial(
         _rtrd_kernel, nk=nk, activation=activation, out_dtype=out_dtype
     )
     try:
         compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=model.dimension_semantics
         )
     except AttributeError:  # older naming
         compiler_params = pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=model.dimension_semantics
         )
 
     out = pl.pallas_call(
         kernel,
-        grid=(gp // bg, cop // bco, nk),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((bg, bco), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gp, cop), out_dtype),
+        grid=model.grid,
+        in_specs=in_specs_from_model(model),
+        out_specs=out_spec_from_model(model),
+        out_shape=jax.ShapeDtypeStruct(model.output.array_shape, out_dtype),
         scratch_shapes=[pltpu.VMEM((bg, bco), jnp.float32)],
         compiler_params=compiler_params,
         interpret=interpret,

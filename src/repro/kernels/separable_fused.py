@@ -79,6 +79,89 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import blocking
 from repro.kernels.epilogue import apply_epilogue as _epilogue
+from repro.kernels.gridspec import (BlockRef, KernelModel,
+                                    in_specs_from_model,
+                                    out_spec_from_model)
+
+
+def fused_kernel_model(*, b: int, ho: int, wo: int, c_in: int, c: int,
+                       co: int, hf: int, wf: int, stride: int,
+                       block_c: int, block_co: int, slab_h: int,
+                       itemsize: int, out_itemsize: int,
+                       has_expand: bool, has_dw_bias: bool,
+                       has_pw_bias: bool, has_residual: bool) -> KernelModel:
+    """The exact grid/BlockSpec geometry ``separable_fused_pallas`` lowers
+    to at these blocks — the single source of truth consumed by BOTH the
+    kernel (specs built from this model) and the static analyzer
+    (``repro.analysis``), so planner<->lowering drift is structurally
+    impossible (DESIGN.md §8).
+
+    ``c_in`` is the raw input channel count (== ``c`` without expand).
+    Shapes are the PADDED shapes the kernel hands to ``pl.pallas_call``
+    after channel/Co/row padding.
+    """
+    cb, cob = block_c, block_co
+    sh = min(slab_h, ho)
+    n_slabs = -(-ho // sh)
+    ho_p = n_slabs * sh
+    slab_hi = (sh - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    pad_c = (-c) % cb
+    pad_co = (-co) % cob
+    cp, cop = c + pad_c, co + pad_co
+    nk = cp // cb
+    rows_in = (ho_p - 1) * stride + hf
+
+    # x window: element-offset (unblocked) indexing — adjacent slabs'
+    # windows overlap by the (hf - stride)-row halo.  With expand the
+    # window carries ALL raw channels; without, one channel slab.
+    if has_expand:
+        x_ref = BlockRef(
+            "x", (b, rows_in, wiu, c_in), (1, slab_hi, wiu, c_in),
+            lambda i, s, j, k, sh=sh, st=stride: (i, s * sh * st, 0, 0),
+            itemsize, unblocked=True)
+    else:
+        x_ref = BlockRef(
+            "x", (b, rows_in, wiu, cp), (1, slab_hi, wiu, cb),
+            lambda i, s, j, k, sh=sh, st=stride, cb=cb:
+                (i, s * sh * st, 0, k * cb),
+            itemsize, unblocked=True)
+    inputs = [x_ref]
+    if has_expand:
+        inputs.append(BlockRef("expand_w", (c_in, cp), (c_in, cb),
+                               lambda i, s, j, k: (0, k), itemsize))
+    inputs.append(BlockRef("dw_f", (hf, wf, cp), (hf, wf, cb),
+                           lambda i, s, j, k: (0, 0, k), itemsize))
+    if has_dw_bias:
+        inputs.append(BlockRef("dw_bias", (1, cp), (1, cb),
+                               lambda i, s, j, k: (0, k), itemsize))
+    inputs.append(BlockRef("pw_w", (cp, cop), (cb, cob),
+                           lambda i, s, j, k: (k, j), itemsize))
+    if has_pw_bias:
+        inputs.append(BlockRef("pw_bias", (1, cop), (1, cob),
+                               lambda i, s, j, k: (0, j), itemsize))
+    if has_residual:
+        inputs.append(BlockRef("residual", (b, ho_p, wo, cop),
+                               (1, sh, wo, cob),
+                               lambda i, s, j, k: (i, s, 0, j), itemsize))
+    out_ref = BlockRef("out", (b, ho_p, wo, cop), (1, sh, wo, cob),
+                       lambda i, s, j, k: (i, s, 0, j), out_itemsize)
+    reshapes = [((sh, wo, cb), (sh * wo, cb))]
+    value_bytes = sh * wo * cb * 4                 # DW intermediate (fp32)
+    if has_expand:
+        reshapes.insert(0, ((slab_hi, wiu, c_in), (slab_hi * wiu, c_in)))
+        value_bytes += slab_hi * wiu * cb * 4      # expanded slab (fp32)
+    return KernelModel(
+        name="separable_fused3" if has_expand else "separable_fused2",
+        grid=(b, n_slabs, cop // cob, nk),
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"),
+        inputs=tuple(inputs),
+        output=out_ref,
+        scratch_bytes=sh * wo * cob * 4,           # fp32 accumulator
+        value_bytes=value_bytes,
+        reshapes=tuple(reshapes),
+    )
 
 
 def _fused_kernel(*refs, hf: int, wf: int, stride: int, nk: int,
@@ -280,41 +363,35 @@ def separable_fused_pallas(
     if ho_p > ho and residual is not None:
         residual = jnp.pad(residual, ((0, 0), (0, ho_p - ho), (0, 0), (0, 0)))
 
-    # Input windows of adjacent slabs overlap by (hf - stride) halo rows, so
-    # the x BlockSpec uses element-offset (unblocked) indexing.  With expand
-    # the window carries ALL raw channels (Ci is small; the reduction steps
-    # slab the EXPANDED channels via the expand_w block instead).
-    if expand_w is not None:
-        x_spec = pl.BlockSpec(
-            (1, slab_hi, wiu, c_in),
-            lambda i, s, j, k: (i, s * sh * stride, 0, 0),
-            indexing_mode=pl.unblocked,
-        )
-    else:
-        x_spec = pl.BlockSpec(
-            (1, slab_hi, wiu, cb),
-            lambda i, s, j, k: (i, s * sh * stride, 0, k * cb),
-            indexing_mode=pl.unblocked,
-        )
-    in_specs = [x_spec]
+    # The grid and every BlockSpec come from the kernel model — the same
+    # object the static analyzer (repro.analysis) checks, so what is proven
+    # statically is what executes (DESIGN.md §8).  Input windows of adjacent
+    # slabs overlap by (hf - stride) halo rows, so the x BlockSpec uses
+    # element-offset (unblocked) indexing; with expand the window carries
+    # ALL raw channels (Ci is small; the reduction steps slab the EXPANDED
+    # channels via the expand_w block instead).
+    model = fused_kernel_model(
+        b=b, ho=ho, wo=wo, c_in=c_in, c=c, co=co, hf=hf, wf=wf,
+        stride=stride, block_c=cb, block_co=cob, slab_h=sh,
+        itemsize=x.dtype.itemsize, out_itemsize=odt.itemsize,
+        has_expand=expand_w is not None, has_dw_bias=dw_bias is not None,
+        has_pw_bias=pw_bias is not None, has_residual=residual is not None,
+    )
     inputs = [x]
     if expand_w is not None:
-        in_specs.append(pl.BlockSpec((c_in, cb), lambda i, s, j, k: (0, k)))
         inputs.append(expand_w)
-    in_specs.append(pl.BlockSpec((hf, wf, cb), lambda i, s, j, k: (0, 0, k)))
     inputs.append(dw_f)
     if dw_bias is not None:
-        in_specs.append(pl.BlockSpec((1, cb), lambda i, s, j, k: (0, k)))
         inputs.append(dw_bias.reshape(1, -1))
-    in_specs.append(pl.BlockSpec((cb, cob), lambda i, s, j, k: (k, j)))
     inputs.append(pw_w)
     if pw_bias is not None:
-        in_specs.append(pl.BlockSpec((1, cob), lambda i, s, j, k: (0, j)))
         inputs.append(pw_bias.reshape(1, -1))
     if residual is not None:
-        in_specs.append(
-            pl.BlockSpec((1, sh, wo, cob), lambda i, s, j, k: (i, s, 0, j)))
         inputs.append(residual)
+    for arr, br in zip(inputs, model.inputs):
+        assert arr.shape == br.array_shape, (br.name, arr.shape,
+                                             br.array_shape)
+    in_specs = in_specs_from_model(model)
 
     kernel = functools.partial(
         _fused_kernel, hf=hf, wf=wf, stride=stride, nk=nk,
@@ -325,22 +402,20 @@ def separable_fused_pallas(
     )
     try:
         compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")
+            dimension_semantics=model.dimension_semantics
         )
     except AttributeError:
         compiler_params = pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")
+            dimension_semantics=model.dimension_semantics
         )
 
+    assert model.output.array_shape == (b, ho_p, wo, cop)
     out = pl.pallas_call(
         kernel,
-        grid=(b, n_slabs, cop // cob, nk),
+        grid=model.grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, sh, wo, cob),
-                               lambda i, s, j, k: (i, s, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho_p, wo, cop), odt),
+        out_specs=out_spec_from_model(model),
+        out_shape=jax.ShapeDtypeStruct(model.output.array_shape, odt),
         scratch_shapes=[pltpu.VMEM((sh * wo, cob), jnp.float32)],
         compiler_params=compiler_params,
         interpret=interpret,

@@ -209,3 +209,72 @@ def test_kernel_vmem_tables_shrink_for_bf16():
                 wo, a["slab_h"], a["block_c"], a["block_co"],
                 blk.hf, blk.hf, blk.stride, itemsize=2)
             assert b16 < b32, a["name"]
+
+
+# ---------------------------------------------------------------------------
+# degenerate geometries (DESIGN.md §8: the ladders must stay strictly
+# descending, deduplicated and feasible even where the benchmarked suites
+# never go — tiny/prime channel counts, narrow rows, width-mult channels)
+# ---------------------------------------------------------------------------
+
+PRIMES = (2, 3, 5, 7, 13, 97, 113, 251)
+
+
+@pytest.mark.parametrize("c", list(range(1, 8)) + list(PRIMES))
+def test_snap_channels_degenerate_c(c):
+    """C < 8 and prime C: every snapped block is feasible (1 <= cb <= C)
+    and idempotent — snapping a snapped value is a no-op (the PL110
+    planlint rule relies on exactly this fixed-point property)."""
+    for budget in (1, 2, 3, 7, 8, 100, 128, 129, 1 << 20):
+        cb = blocking.snap_channels(budget, c)
+        assert 1 <= cb <= c
+        assert blocking.snap_channels(cb, c) == cb
+
+
+@pytest.mark.parametrize("n", PRIMES)
+def test_candidate_ladders_prime_counts(n):
+    """Prime Co/Ho: the ladders still lead with the whole extent, stay
+    strictly descending and deduplicated, and every rung is feasible."""
+    for cands in (blocking.co_candidates(n), blocking.slab_candidates(n)):
+        assert cands[0] == n
+        assert all(a > b for a, b in zip(cands, cands[1:])), cands
+        assert len(cands) == len(set(cands))
+        assert all(1 <= x <= n for x in cands)
+
+
+@pytest.mark.parametrize("ho,wo,c,co", [
+    (7, 7, 3, 5),        # C < 8, Wo < 128, everything tiny
+    (13, 13, 7, 13),     # prime Ho and Co, C < 8
+    (113, 113, 8, 8),    # prime rows at a real V2-stem-like resolution
+    (5, 3, 2, 2),        # near-scalar
+])
+def test_plan_separable_degenerate_feasible(ho, wo, c, co):
+    """The fused planner's answer at degenerate geometry is internally
+    consistent: snapped channel block, ladder-member Co panel, exact slab
+    arithmetic — i.e. it passes the same field checks planlint enforces."""
+    plan = blocking.plan_separable(ho, wo, c, co)
+    assert plan is not None
+    assert plan.block_c == blocking.snap_channels(plan.block_c, c)
+    assert plan.block_co in blocking.co_candidates(co)
+    assert 1 <= plan.slab_h <= ho
+    assert plan.n_slabs == -(-ho // plan.slab_h)
+    assert plan.halo_rows == (2 if plan.n_slabs > 1 else 0)
+    assert plan.vmem_bytes <= blocking.DEFAULT_VMEM_BUDGET
+
+
+@pytest.mark.parametrize("wm", [0.25, 0.35, 0.75, 1.4])
+def test_width_mult_channel_counts_plan_cleanly(wm):
+    """make_divisible width-mult channel ladders (the counts real slimmed
+    MobileNets use) plan feasibly end to end: 2- and 3-stage fused plans
+    exist and carry ladder-member blocks."""
+    from repro.core.network import make_divisible
+    for c_base, co_base in ((32, 64), (64, 128), (512, 512)):
+        ci = make_divisible(c_base * wm)
+        co = make_divisible(co_base * wm)
+        assert ci % 8 == 0 and co % 8 == 0  # the make_divisible contract
+        p2 = blocking.plan_separable(14, 14, ci, co)
+        assert p2 is not None and p2.block_co in blocking.co_candidates(co)
+        p3 = blocking.plan_separable3(14, 14, ci, 6 * ci, co)
+        assert p3 is not None
+        assert p3.block_c == blocking.snap_channels(p3.block_c, 6 * ci)
+        assert p3.block_co in blocking.co_candidates(co)
