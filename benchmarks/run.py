@@ -29,6 +29,16 @@ Flags:
   (default: $REPRO_TUNE_CACHE or ~/.cache/repro/autotune.json). Re-running
   with the same PATH must print every row as cache=hit with n_cand=0 —
   CI's replay gate.
+* ``--fault-inject POINTS`` — run the three-phase runtime-hardening matrix
+  (``benchmarks/runtime_faults.py``, DESIGN.md §9): arm the comma-separated
+  injection points (``point[:times]``, persistent by default) against the
+  full V1/V2 bodies, assert oracle parity + exact injected-fallback
+  telemetry, then prove the quarantined replay and a clean run report zero
+  fallbacks. Like ``--autotune`` this EXECUTES even under ``--dry-run``
+  (fault recovery is the feature under test); quick mode runs @16x16,
+  ``--full`` at the paper's 112x112.
+* ``--runtime-report PATH`` — write the three phase telemetry snapshots as
+  JSON (requires ``--fault-inject``).
 """
 from __future__ import annotations
 
@@ -53,6 +63,11 @@ def main() -> None:
                     help="append the analytic-vs-measured ChainPlan table")
     ap.add_argument("--tune-cache", default=None, metavar="PATH",
                     help="tune-cache JSON for --autotune")
+    ap.add_argument("--fault-inject", default=None, metavar="POINTS",
+                    help="comma-separated injection points (point[:times]) "
+                         "for the runtime-hardening matrix (DESIGN.md §9)")
+    ap.add_argument("--runtime-report", default=None, metavar="PATH",
+                    help="write the fault-injection telemetry report here")
     args = ap.parse_args()
 
     from benchmarks.paper_figs import run_all
@@ -129,6 +144,13 @@ def main() -> None:
                                              full=args.full)
         rows.extend(tune_rows)
         results["autotune"] = tune_recs
+
+    if args.fault_inject:
+        from benchmarks.runtime_faults import runtime_rows
+        rt_rows, rt_recs = runtime_rows(args.fault_inject, full=args.full,
+                                        report_path=args.runtime_report)
+        rows.extend(rt_rows)
+        results["runtime"] = rt_recs
 
     recs = load_records()
     rows.extend(csv_rows(recs))

@@ -1,0 +1,198 @@
+"""Fault-injection benchmark (DESIGN.md §9): the runtime ladder end to end.
+
+Three self-asserting phases over the full MobileNetV1/V2 bodies, driven by
+``benchmarks/run.py --fault-inject POINTS``:
+
+* **faulted** — arm the requested injection points against a FRESH
+  tune-cache/quarantine store, run ``execute_network`` per (arch x dtype),
+  and assert (a) the output still matches the fp32 per-block reference
+  oracle (bitwise for fp32 when every lowering point is armed — every
+  block then lands on the reference rung, which IS the oracle's execution;
+  tolerance otherwise) and (b) the telemetry records exactly the injected
+  fallbacks (``fallbacks == injected_fallbacks > 0``).
+* **quarantined replay** — disarm everything, keep the store, re-run: the
+  persisted quarantine must steer every plan around the banned rungs with
+  ZERO fallback events (``quarantine_hits > 0`` proves it was consulted).
+* **clean** — a fresh store with nothing armed: zero fallbacks, zero
+  quarantine hits — the steady-state guarantee that the ladder costs
+  nothing when nothing fails.
+
+Emits ``runtime/...`` CSV rows for the benchmark table and (optionally) a
+``runtime_report.json`` with the three phase snapshots for the CI artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FP32_REL_TOL = 1e-5
+#: Matches examples/mobilenet_inference.BF16_REL_TOL (DESIGN.md §7).
+BF16_REL_TOL = 5e-2
+
+#: The lowering points; when ALL are armed persistently every block is
+#: forced down to the reference rung, making fp32 outputs bitwise-equal to
+#: the per-block oracle.
+_LOWERING_POINTS = ("lowering:separable_fused", "lowering:pwconv",
+                    "lowering:dwconv2d")
+
+
+def _configs():
+    from repro.core import network
+    from repro.kernels.policy import DtypePolicy
+    return [
+        (arch, dname, net, DtypePolicy(stream="bfloat16")
+         if dname == "bf16" else DtypePolicy())
+        for arch, net in (("v1", network.mobilenet_v1_spec()),
+                          ("v2", network.mobilenet_v2_spec()))
+        for dname in ("fp32", "bf16")
+    ]
+
+
+def _oracle(net, params, x, tune_cache):
+    """fp32 per-block reference (the pre-network-engine path), computed
+    with injection suppressed so armed persistent faults cannot poison
+    the yardstick itself."""
+    from repro.core import chain
+    from repro.kernels.policy import KernelPolicy
+    from repro.runtime import faultinject
+    pol = KernelPolicy(impl="xla", on_failure="raise",
+                       tune_cache=tune_cache)
+    with faultinject.suppressed():
+        y = x
+        for spec, p in zip(net.blocks, params):
+            y = chain.execute(spec, p, y, policy=pol)
+    return np.asarray(y, np.float32)
+
+
+def _run_config(net, params, x, policy, oracle, *, bitwise: bool,
+                tol: float) -> dict:
+    import warnings
+
+    from repro.core import network
+    from repro.runtime import telemetry
+
+    telemetry.reset_runtime_telemetry()
+    t0 = time.perf_counter()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y = network.execute_network(net, params, x, policy=policy)
+    jax.block_until_ready(y)
+    ms = (time.perf_counter() - t0) * 1e3
+    got = np.asarray(y, np.float32)
+    rel = float(np.abs(got - oracle).max() / (np.abs(oracle).max() + 1e-30))
+    if bitwise:
+        np.testing.assert_array_equal(got, oracle)
+    assert rel < tol, f"parity {rel} >= {tol}"
+    rep = telemetry.runtime_report()
+    rep["rel_err"] = rel
+    rep["ms"] = ms
+    rep["bitwise_checked"] = bool(bitwise)
+    return rep
+
+
+def runtime_rows(points_spec: str, *, res: int = 16, full: bool = False,
+                 store_dir: str = "artifacts/runtime",
+                 report_path=None):
+    """The three-phase matrix described in the module docstring; returns
+    ``(csv_rows, results_dict)`` like the other benchmark table modules.
+    Raises AssertionError on any violated invariant — CI just runs it."""
+    from repro.core import network
+    from repro.kernels.policy import KernelPolicy
+    from repro.runtime import faultinject
+    from repro.runtime import quarantine as Q
+
+    if full:
+        res = 112
+    os.makedirs(store_dir, exist_ok=True)
+    faulted_store = os.path.join(store_dir, "faulted")
+    clean_store = os.path.join(store_dir, "clean")
+    for d in (faulted_store, clean_store):
+        os.makedirs(d, exist_ok=True)
+        for f in ("tune.json", "quarantine.json"):
+            try:
+                os.remove(os.path.join(d, f))
+            except FileNotFoundError:
+                pass
+    Q.clear_memo()
+
+    rows, results = [], {"points": None, "res": res, "phases": {}}
+    configs = _configs()
+    data = {}
+    for arch, dname, net, dp in configs:
+        kx = jax.random.PRNGKey(1)
+        x = jax.random.normal(kx, (1, res, res, net.c_in))
+        params = network.init_network(jax.random.PRNGKey(0), net)
+        data[(arch, dname)] = (net, dp, params, x)
+
+    def policy(dp, store):
+        return KernelPolicy(impl="xla", numeric_guard=True,
+                            dtype_policy=dp,
+                            tune_cache=os.path.join(store, "tune.json"))
+
+    def phase(name, store, *, want_fallbacks, want_hits):
+        network.clear_network_cache()
+        Q.clear_memo()
+        phase_reps = {}
+        for arch, dname, net, dp in configs:
+            net_, dp_, params, x = data[(arch, dname)]
+            pol = policy(dp_, store)
+            oracle = _oracle(net_, params, x,
+                             os.path.join(store, "tune.json"))
+            # fp32 + every lowering point armed -> every block executes the
+            # reference rung, which is exactly the oracle's computation
+            bitwise = (name == "faulted" and dname == "fp32"
+                       and all(p in faultinject.armed_points()
+                               for p in _LOWERING_POINTS))
+            tol = BF16_REL_TOL if dname == "bf16" else FP32_REL_TOL
+            rep = _run_config(net_, params, x, pol, oracle,
+                              bitwise=bitwise, tol=tol)
+            if want_fallbacks:
+                assert rep["fallbacks"] > 0, (name, arch, dname, rep)
+                assert rep["fallbacks"] == rep["injected_fallbacks"], \
+                    (name, arch, dname, rep)
+            else:
+                assert rep["fallbacks"] == 0, (name, arch, dname, rep)
+            if want_hits is True:
+                assert rep["quarantine_hits"] > 0, (name, arch, dname, rep)
+            elif want_hits is False:
+                assert rep["quarantine_hits"] == 0, (name, arch, dname, rep)
+            phase_reps[f"{arch}/{dname}"] = rep
+            rows.append(
+                f"runtime/{name}/{arch}/{dname},{rep['ms'] * 1e3:.1f},"
+                f"fallbacks={rep['fallbacks']};"
+                f"injected={rep['injected_fallbacks']};"
+                f"recoveries={rep['recoveries']};"
+                f"quarantine_hits={rep['quarantine_hits']};"
+                f"rel_err={rep['rel_err']:.2e};"
+                f"bitwise={rep['bitwise_checked']}")
+        results["phases"][name] = phase_reps
+
+    # phase 1: faulted — every requested point armed persistently
+    points = faultinject.arm_from_spec(points_spec)
+    results["points"] = list(points)
+    try:
+        phase("faulted", faulted_store, want_fallbacks=True, want_hits=None)
+    finally:
+        faultinject.disarm_all()
+
+    # phase 2: quarantined replay — same store, nothing armed: the
+    # persisted bans must be honored with ZERO retries
+    phase("quarantined_replay", faulted_store,
+          want_fallbacks=False, want_hits=True)
+
+    # phase 3: clean — fresh store, nothing armed, nothing quarantined
+    phase("clean", clean_store, want_fallbacks=False, want_hits=False)
+
+    if report_path:
+        d = os.path.dirname(report_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(report_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows, results

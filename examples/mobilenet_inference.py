@@ -15,6 +15,12 @@ the XLA path, and cross-checks outputs.
 the stem).  CI smokes --res 16 (fp32, interpret) and --res 32 --dtype bf16.
 --fused is accepted for compatibility; fusion is a planner decision now
 and always on (KernelPolicy(fused=False) remains the opt-out).
+--fault-inject POINTS arms the runtime fault-injection harness (DESIGN.md
+§9) at the named points (comma-separated ``point[:times]``, persistent by
+default) before executing: the degradation ladder recovers, the oracle
+parity assertion still holds, and the fallback telemetry is printed at the
+end.  The quarantine store defaults to artifacts/runtime/quarantine.json
+for this mode (override with $REPRO_QUARANTINE).
 """
 import os
 import sys
@@ -83,25 +89,31 @@ def run_network(name, net, args):
           f"{tunf.bytes_hbm/1e6:.2f} MB); AI {t.intensity:.1f} FLOPs/B")
 
     # ONE jitted call for the whole backbone; plan resolved once above.
+    # Under --fault-inject the plan is left to the engine so re-plans after
+    # a quarantine write take effect between repetitions.
+    nplan_arg = None if args.fault_inject else nplan
     y = network.execute_network(net, params, x, policy=pol,
-                                network_plan=nplan)
+                                network_plan=nplan_arg)
     jax.block_until_ready(y)
     reps = 2 if args.pallas else 10
     t0 = time.perf_counter()
     for _ in range(reps):
         y = network.execute_network(net, params, x, policy=pol,
-                                    network_plan=nplan)
+                                    network_plan=nplan_arg)
     jax.block_until_ready(y)
     ms = (time.perf_counter() - t0) / reps * 1e3
     print(f"  end-to-end: {ms:.2f} ms/image -> features {y.shape} {y.dtype}")
 
     # Parity vs the fp32 per-block oracle (XLA, native dtype, fresh fp32
-    # weights — the pre-network-engine execution path).
+    # weights — the pre-network-engine execution path).  Injection is
+    # suppressed around it: the yardstick itself must not degrade.
+    from repro.runtime import faultinject
     p32 = network.init_network(jax.random.PRNGKey(0), net)
-    oracle = KernelPolicy(impl="xla")
-    ref = x
-    for spec, p in zip(net.blocks, p32):
-        ref = chain.execute(spec, p, ref, policy=oracle)
+    oracle = KernelPolicy(impl="xla", on_failure="raise")
+    with faultinject.suppressed():
+        ref = x
+        for spec, p in zip(net.blocks, p32):
+            ref = chain.execute(spec, p, ref, policy=oracle)
     ref = np.asarray(ref, np.float32)
     got = np.asarray(y, np.float32)
     rel = float(np.abs(got - ref).max() / (np.abs(ref).max() + 1e-30))
@@ -132,7 +144,19 @@ def main():
                     help="run the static plan verifier (repro.analysis, "
                          "DESIGN.md §8) on the resolved NetworkPlan before "
                          "executing; raises on any error diagnostic")
+    ap.add_argument("--fault-inject", default=None, metavar="POINTS",
+                    help="arm runtime fault-injection points "
+                         "(comma-separated point[:times], DESIGN.md §9) "
+                         "and print the fallback telemetry")
     args = ap.parse_args()
+
+    if args.fault_inject:
+        os.environ.setdefault(
+            "REPRO_QUARANTINE",
+            os.path.join("artifacts", "runtime", "quarantine.json"))
+        from repro.runtime import faultinject
+        points = faultinject.arm_from_spec(args.fault_inject)
+        print(f"fault injection armed: {', '.join(points)}")
 
     nets = []
     if args.arch in ("v1", "both"):
@@ -141,6 +165,17 @@ def main():
         nets.append(("MobileNetV2", network.mobilenet_v2_spec()))
     for name, net in nets:
         run_network(name, net, args)
+
+    if args.fault_inject:
+        from repro.runtime import faultinject, telemetry
+        rep = telemetry.runtime_report()
+        print(f"\nruntime telemetry: {rep['fallbacks']} fallbacks "
+              f"({rep['injected_fallbacks']} injected), "
+              f"{rep['recoveries']} recoveries, "
+              f"{rep['quarantine_hits']} quarantine hits; fired: "
+              f"{faultinject.fired_counts()}")
+        assert rep["fallbacks"] == rep["injected_fallbacks"], rep
+        faultinject.disarm_all()
 
     print("\nper-layer AI bounds (paper's analysis, DESIGN.md §2): "
           f"DW ours {it.t_ours_dw_asymptotic(3, 3):.3f} vs TF-Lite "

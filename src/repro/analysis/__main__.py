@@ -18,7 +18,7 @@ import sys
 import jax.numpy as jnp
 
 from repro import analysis
-from repro.analysis.diagnostics import Report
+from repro.analysis.diagnostics import INFO, Diagnostic, Report
 from repro.core import chain, network
 from repro.kernels.policy import BF16_STREAM, NATIVE, KernelPolicy
 
@@ -52,6 +52,27 @@ def _policies() -> dict:
     }
 
 
+def quarantine_diagnostic(spec, shape, dtype, pol, label):
+    """RT401: the problem is quarantined on this backend (DESIGN.md §9) —
+    the static sweep REPORTS it instead of re-verifying a plan the runtime
+    ladder will degrade at execute time anyway.  None when not quarantined
+    (or the policy opted out of the ladder)."""
+    if pol.on_failure != "degrade":
+        return None
+    from repro.runtime import quarantine
+    banned = quarantine.banned_kinds(spec, shape, dtype, pol)
+    if not banned:
+        return None
+    return Diagnostic(
+        rule="RT401", severity=INFO, segment=label,
+        message=f"plan quarantined on this backend (banned rungs: "
+                f"{sorted(banned)}); the runtime ladder degrades it at "
+                "execute time — static re-verification skipped",
+        hint="inspect/clear the quarantine store "
+             "(runtime.quarantine.quarantine_path) to re-verify the full "
+             "ladder")
+
+
 def sweep(batch: int = 1, res: int = 112, jaxpr: bool = True,
           verbose: bool = False) -> Report:
     report = Report()
@@ -59,6 +80,12 @@ def sweep(batch: int = 1, res: int = 112, jaxpr: bool = True,
     layers = _bench_layers()
 
     def run(label, spec, shape, dtype, pol):
+        qd = quarantine_diagnostic(spec, shape, dtype, pol, label)
+        if qd is not None:
+            report.extend([qd])
+            print(f"  {label:44s} QUARANTINED "
+                  f"(RT401 — runtime ladder degrades it)")
+            return
         cp = chain.plan(spec, shape, dtype=dtype, policy=pol)
         r = analysis.analyze_chain(spec, cp, shape, dtype=dtype, policy=pol,
                                    label=label, jaxpr=jaxpr)
@@ -92,9 +119,23 @@ def sweep(batch: int = 1, res: int = 112, jaxpr: bool = True,
         for net in (network.mobilenet_v1_spec(),
                     network.mobilenet_v2_spec()):
             label = f"network/{net.name}/res{res}/{pname}"
+            x_shape = (batch, res, res, net.c_in)
+            bpols = network.resolve_block_policies(net, pol)
+            problems, _ = network._block_problems(net, x_shape,
+                                                  jnp.float32, bpols)
+            qds = [qd for i, (spec, (shape, dt), bp) in enumerate(
+                       zip(net.blocks, problems, bpols))
+                   for qd in [quarantine_diagnostic(
+                       spec, shape, jnp.dtype(dt), bp,
+                       f"{label}/block{i}")]
+                   if qd is not None]
+            if qds:
+                report.extend(qds)
+                print(f"  {label:44s} QUARANTINED ({len(qds)} blocks, "
+                      f"RT401 — runtime ladder degrades them)")
+                continue
             nplan = network.plan_network(
-                net, (batch, res, res, net.c_in), dtype=jnp.float32,
-                policy=pol)
+                net, x_shape, dtype=jnp.float32, policy=pol)
             r = analysis.analyze_network(net, nplan, policy=pol,
                                          jaxpr=jaxpr)
             report.extend(r.diagnostics)

@@ -211,7 +211,17 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     larger blocks (fewer panels, less input re-fetch).  The returned
     ``ChainPlan.dtype_bytes`` is likewise the stream width, which makes
     :func:`chain_traffic` model the streamed bytes automatically.
+
+    Runtime hardening (DESIGN.md §9): under the default
+    ``policy.on_failure == "degrade"`` the persistent plan quarantine is
+    consulted (keyed like the tune cache, on the NATIVE input dtype) and
+    fusion rungs a previous run failed at on this backend are excluded from
+    the walk — the plan degrades at plan time, with zero retries.
     """
+    banned: frozenset = frozenset()
+    if policy.on_failure == "degrade":
+        from repro.runtime import quarantine  # lazy: runtime sits above core
+        banned = quarantine.banned_kinds(spec, x_shape, dtype, policy)
     if policy.autotune:
         cached = autotune.lookup_cached_plan(spec, x_shape, dtype, policy)
         if cached is not None:
@@ -240,7 +250,7 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     i = 0
     while i < n:
         s = stages[i]
-        if allowed and _fusable3(stages, i):
+        if allowed and "fused3" not in banned and _fusable3(stages, i):
             d, proj = stages[i + 1], stages[i + 2]
             ho, wo = d.out_dims(h, w)
             with_res = res_active and i + 3 == n
@@ -253,7 +263,7 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
                 h, w, c = ho, wo, proj.features
                 i += 3
                 continue
-        if allowed and _fusable2(stages, i):
+        if allowed and "fused2" not in banned and _fusable2(stages, i):
             d, proj = stages[i], stages[i + 1]
             ho, wo = d.out_dims(h, w)
             with_res = res_active and i + 2 == n
@@ -315,6 +325,29 @@ def _maybe_verify(spec: SeparableSpec, cp: ChainPlan, x_shape,
 lower = lowering.lower
 
 
+def resolve_plan(spec: SeparableSpec, params: Sequence[dict], x: jax.Array,
+                 *, policy: KernelPolicy = DEFAULT_POLICY,
+                 chain_plan: Optional[ChainPlan] = None) -> ChainPlan:
+    """The plan :func:`execute` runs: the explicitly supplied plan
+    (verified), the measured autotune winner (tune-on-first-execute on a
+    miss), or the analytic :func:`plan` — exactly the resolution order of
+    the raw execute path, factored out so the runtime executor
+    (``repro.runtime.executor``) shares it verbatim."""
+    if chain_plan is None:
+        if policy.autotune:
+            base = plan(spec, x.shape, dtype=x.dtype,
+                        policy=dataclasses.replace(policy, autotune=False))
+            return _maybe_verify(
+                spec, autotune.autotune_chain(
+                    spec, params, x, policy=policy, base_plan=base).plan,
+                x.shape, policy)
+        return plan(spec, x.shape, dtype=x.dtype, policy=policy)
+    # an explicitly supplied plan bypasses plan() — verify it here so
+    # the debug knob also gates hand-built / deserialized plans
+    _maybe_verify(spec, chain_plan, x.shape, policy)
+    return chain_plan
+
+
 def execute(spec: SeparableSpec, params: Sequence[dict], x: jax.Array, *,
             policy: KernelPolicy = DEFAULT_POLICY,
             chain_plan: Optional[ChainPlan] = None) -> jax.Array:
@@ -326,22 +359,20 @@ def execute(spec: SeparableSpec, params: Sequence[dict], x: jax.Array, *,
     (including in other processes) replays the cached plan with zero
     re-measurement.  Cache miss with tuning disabled — or tuning disabled
     outright — falls back to the analytic planner.
+
+    Under the default ``policy.on_failure == "degrade"`` (or with
+    ``policy.numeric_guard``) execution routes through the runtime
+    degradation ladder (``repro.runtime.executor``, DESIGN.md §9): the
+    steady-state path is identical — same plan resolution, same lowering,
+    bitwise-identical outputs — plus a try/except; a classified backend
+    failure quarantines the failing rung and retries one rung down.
     """
-    if chain_plan is None:
-        if policy.autotune:
-            base = plan(spec, x.shape, dtype=x.dtype,
-                        policy=dataclasses.replace(policy, autotune=False))
-            chain_plan = _maybe_verify(
-                spec, autotune.autotune_chain(
-                    spec, params, x, policy=policy, base_plan=base).plan,
-                x.shape, policy)
-        else:
-            chain_plan = plan(spec, x.shape, dtype=x.dtype, policy=policy)
-    else:
-        # an explicitly supplied plan bypasses plan() — verify it here so
-        # the debug knob also gates hand-built / deserialized plans
-        _maybe_verify(spec, chain_plan, x.shape, policy)
-    return lower(spec, chain_plan, policy)(params, x)
+    if policy.on_failure == "degrade" or policy.numeric_guard:
+        from repro.runtime import executor  # lazy: runtime sits above core
+        return executor.execute_chain(spec, params, x, policy=policy,
+                                      chain_plan=chain_plan)
+    cp = resolve_plan(spec, params, x, policy=policy, chain_plan=chain_plan)
+    return lower(spec, cp, policy)(params, x)
 
 
 # ---------------------------------------------------------------------------

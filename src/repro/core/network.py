@@ -280,8 +280,9 @@ def plan_network(net: NetworkSpec, x_shape, *, dtype=jnp.float32,
     key = network_key(net, x_shape, dtype, policy, block_dtype_policies)
     if policy.autotune:
         cached = _lookup_network_entry(key, policy)
-        if cached is not None and _validate_network_entry(net, cached,
-                                                          policy):
+        if cached is not None and _validate_network_entry(
+                net, cached, policy,
+                block_dtype_policies=block_dtype_policies):
             return _maybe_verify_network(net, cached, policy,
                                          block_dtype_policies)
     nplan = NetworkPlan(
@@ -298,11 +299,13 @@ def plan_network(net: NetworkSpec, x_shape, *, dtype=jnp.float32,
 
 
 def _validate_network_entry(net: NetworkSpec, nplan: NetworkPlan,
-                            policy: KernelPolicy) -> bool:
+                            policy: KernelPolicy,
+                            block_dtype_policies=None) -> bool:
     """Replayed whole-network cache entries must pass planlint block-wise
-    before executing verbatim (DESIGN.md §8); a stale entry is dropped
-    with a warning (and the caller re-plans), never executed or crashed
-    on.  Lazy import: analysis sits above this module."""
+    before executing verbatim (DESIGN.md §8) and must not use any
+    quarantined rung (DESIGN.md §9); a stale/banned entry is dropped with
+    a warning (and the caller re-plans), never executed or crashed on.
+    Lazy import: analysis/runtime sit above this module."""
     from repro.analysis import lint_cached_plan
     path = policy.tune_cache or autotune.default_cache_path()
     for i, (spec, cp, shape) in enumerate(zip(net.blocks, nplan.plans,
@@ -315,6 +318,21 @@ def _validate_network_entry(net: NetworkSpec, nplan: NetworkPlan,
                 f"{path}: block {i} failed planlint ({rules}); "
                 "re-planning analytically", stacklevel=3)
             return False
+    if policy.on_failure == "degrade":
+        from repro.runtime import quarantine
+        policies = resolve_block_policies(net, policy, block_dtype_policies)
+        for i, (spec, cp, shape, dt, pol) in enumerate(zip(
+                net.blocks, nplan.plans, nplan.block_shapes,
+                nplan.block_dtypes, policies)):
+            banned = quarantine.banned_kinds(spec, shape, jnp.dtype(dt), pol)
+            if banned and ("unfused" in banned
+                           or any(s.kind in banned for s in cp.segments)):
+                warnings.warn(
+                    f"dropping network tune-cache entry {nplan.key} from "
+                    f"{path}: block {i} uses quarantined rungs "
+                    f"({sorted(banned)} banned); re-planning analytically",
+                    stacklevel=3)
+                return False
     return True
 
 
@@ -435,8 +453,25 @@ def build_network_fn(net: NetworkSpec, nplan: NetworkPlan,
     """Compose the per-block lowered runners into one ``run(params, x)``.
     Pure composition — every block executes its planned blocks verbatim
     (the lowering never re-plans), so jitting ``run`` compiles the whole
-    backbone as one program."""
+    backbone as one program.
+
+    Quarantine honoring (DESIGN.md §9): the planner already degrades
+    banned FUSION rungs at plan time, but an ``"unfused"`` ban (the Pallas
+    kernels themselves failed for a block's problem) cannot be expressed
+    in a ChainPlan — it is honored here by lowering that block on the XLA
+    reference backend, keeping the rest of the network on its fast path
+    inside the same jitted program."""
     policies = resolve_block_policies(net, policy, block_dtype_policies)
+    if policy.on_failure == "degrade":
+        from repro.runtime import quarantine  # lazy: runtime sits above
+        policies = tuple(
+            dataclasses.replace(pol, impl="xla")
+            if "unfused" in quarantine.banned_kinds(spec, shape,
+                                                    jnp.dtype(dt), pol)
+            else pol
+            for spec, pol, shape, dt in zip(net.blocks, policies,
+                                            nplan.block_shapes,
+                                            nplan.block_dtypes))
     runners = [lowering.lower(spec, cp, pol)
                for spec, cp, pol in zip(net.blocks, nplan.plans, policies)]
 
@@ -472,23 +507,49 @@ def execute_network(net: NetworkSpec, params, x, *,
     (cache-replayed when already tuned), else :func:`plan_network` — build
     the composed runner, jit it, and memoize the pair.  Every later call
     is a dictionary hit straight into the compiled program.
+
+    Under the default ``policy.on_failure == "degrade"`` (or with
+    ``policy.numeric_guard``) the call routes through the runtime guard
+    (``repro.runtime.executor.run_network``, DESIGN.md §9): the
+    steady-state path is the same ONE jitted call; a classified failure of
+    the composed program recovers per-block, quarantining the failing
+    blocks so the next call re-plans and re-jits around them.
     """
+    if policy.on_failure == "degrade" or policy.numeric_guard:
+        from repro.runtime import executor  # lazy: runtime sits above core
+        return executor.run_network(
+            net, params, x, policy=policy, network_plan=network_plan,
+            block_dtype_policies=block_dtype_policies)
+    return _execute_network_raw(
+        net, params, x, policy=policy, network_plan=network_plan,
+        block_dtype_policies=block_dtype_policies)
+
+
+def _execute_network_raw(net: NetworkSpec, params, x, *,
+                         policy: KernelPolicy = DEFAULT_POLICY,
+                         network_plan: Optional[NetworkPlan] = None,
+                         block_dtype_policies=None):
+    """The unguarded engine behind :func:`execute_network`: plan, jit,
+    memoize, run.  The (plan, runner) pair is memoized only AFTER its
+    first call succeeds — a plan whose trace/compile fails must not poison
+    the memo, or the re-plan after a quarantine write could never happen."""
     cache_key = (net, x.shape, jnp.dtype(x.dtype).name, policy,
                  block_dtype_policies, network_plan)
     hit = _NETWORK_CACHE.get(cache_key)
-    if hit is None:
-        nplan = network_plan
-        if nplan is None:
-            if policy.autotune:
-                nplan = tune_network(
-                    net, params, x, policy=policy,
-                    block_dtype_policies=block_dtype_policies).plan
-            else:
-                nplan = plan_network(
-                    net, x.shape, dtype=x.dtype, policy=policy,
-                    block_dtype_policies=block_dtype_policies)
-        fn = jax.jit(build_network_fn(net, nplan, policy,
-                                      block_dtype_policies))
-        hit = (nplan, fn)
-        _NETWORK_CACHE[cache_key] = hit
-    return hit[1](params, x)
+    if hit is not None:
+        return hit[1](params, x)
+    nplan = network_plan
+    if nplan is None:
+        if policy.autotune:
+            nplan = tune_network(
+                net, params, x, policy=policy,
+                block_dtype_policies=block_dtype_policies).plan
+        else:
+            nplan = plan_network(
+                net, x.shape, dtype=x.dtype, policy=policy,
+                block_dtype_policies=block_dtype_policies)
+    fn = jax.jit(build_network_fn(net, nplan, policy,
+                                  block_dtype_policies))
+    y = fn(params, x)
+    _NETWORK_CACHE[cache_key] = (nplan, fn)
+    return y

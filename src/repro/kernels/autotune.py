@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.kernels import blocking, lowering
 from repro.kernels.blocking import BlockPlan, ChainPlan, ChainSegment
+from repro.kernels.diskstore import VersionedJsonStore
 from repro.kernels.policy import KernelPolicy
 
 #: Cache-file schema version; bump on incompatible layout changes (old
@@ -171,50 +172,18 @@ def deserialize_chain_plan(d: dict) -> ChainPlan:
 # Persistent cache
 # ---------------------------------------------------------------------------
 
-class TuneCache:
+class TuneCache(VersionedJsonStore):
     """JSON-file-backed map ``key -> {signature, plan, measured_us, ...}``.
 
-    Load tolerates a missing, unreadable or corrupted file (the cache is a
-    performance artifact, never a correctness dependency): any parse
-    failure yields an EMPTY cache whose next ``save`` rewrites the file.
-    ``save`` is atomic (tmp file + ``os.replace``) so a crashed writer
-    cannot corrupt a reader."""
+    All the durability mechanics live in the shared
+    :class:`~repro.kernels.diskstore.VersionedJsonStore` (also the base of
+    the runtime plan quarantine): load tolerates a missing file silently and
+    WARNS on a corrupted/unreadable one before recovering as empty (the
+    cache is a performance artifact, never a correctness dependency), and
+    save is merge-on-write + atomic ``os.replace`` — two processes tuning
+    disjoint problems into one file both keep their entries."""
 
-    def __init__(self, path: str):
-        self.path = path
-        self.entries: dict = {}
-
-    @classmethod
-    def load(cls, path: str) -> "TuneCache":
-        cache = cls(path)
-        try:
-            with open(path) as f:
-                raw = json.load(f)
-            if (isinstance(raw, dict) and raw.get("version") == CACHE_VERSION
-                    and isinstance(raw.get("entries"), dict)):
-                cache.entries = raw["entries"]
-        except FileNotFoundError:
-            pass
-        except (OSError, ValueError):
-            pass  # corrupted / unreadable -> recover as empty
-        return cache
-
-    def get(self, key: str) -> Optional[dict]:
-        entry = self.entries.get(key)
-        return entry if isinstance(entry, dict) else None
-
-    def put(self, key: str, entry: dict) -> None:
-        self.entries[key] = entry
-
-    def save(self) -> None:
-        d = os.path.dirname(self.path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump({"version": CACHE_VERSION, "entries": self.entries},
-                      f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+    version = CACHE_VERSION
 
 
 def validate_cached_plan(spec, cp: ChainPlan, x_shape: Sequence[int],
@@ -251,7 +220,23 @@ def lookup_cached_plan(spec, x_shape: Sequence[int], dtype,
         cp = deserialize_chain_plan(entry["plan"])
     except (KeyError, TypeError, ValueError):
         return None
-    return validate_cached_plan(spec, cp, x_shape, key, path)
+    cp = validate_cached_plan(spec, cp, x_shape, key, path)
+    if cp is None:
+        return None
+    if getattr(policy, "on_failure", "raise") == "degrade":
+        # a tuned winner that uses a quarantined rung must not replay
+        # (DESIGN.md §9) — drop it and let the planner degrade
+        from repro.runtime import quarantine  # lazy: runtime sits above
+        banned = quarantine.load(quarantine.quarantine_path(policy)) \
+            .banned(key)
+        if banned and ("unfused" in banned
+                       or any(s.kind in banned for s in cp.segments)):
+            warnings.warn(
+                f"dropping tune-cache entry {key} from {path}: its plan "
+                f"uses quarantined rungs ({sorted(banned)} banned); the "
+                "analytic planner will degrade around them", stacklevel=3)
+            return None
+    return cp
 
 
 # ---------------------------------------------------------------------------
@@ -382,19 +367,49 @@ def _with_segment_plan(cp: ChainPlan, si: int, plan: BlockPlan) -> ChainPlan:
 # Timing harness
 # ---------------------------------------------------------------------------
 
-def measure_run(run, params, x, *, warmup: int = 1,
-                repeats: int = 5) -> float:
+#: Transient-failure retries per measurement (RESOURCE_EXHAUSTED while a
+#: sibling benchmark holds the device, a flaky interpret-mode trace):
+#: retried this many times before the failure propagates to the tuner.
+MEASURE_RETRIES = 2
+
+
+def measure_run(run, params, x, *, warmup: int = 1, repeats: int = 5,
+                retries: int = MEASURE_RETRIES) -> float:
     """Median wall seconds of ``run(params, x)`` jitted: ``warmup`` calls
     absorb compilation (and interpret-mode tracing), then median-of-k timed
-    calls, each synchronized with ``block_until_ready``."""
+    calls, each synchronized with ``block_until_ready``.
+
+    Robustness (DESIGN.md §9): a classified backend failure
+    (``runtime.failures.classify``) during warmup/timing is retried up to
+    ``retries`` times — transient device contention must not abort a whole
+    tune — then propagates to the caller (``autotune_chain`` folds it into
+    the candidate's record).  Unrecognized exceptions propagate immediately.
+    A first timed sample more than 10x the median of the rest is discarded
+    as a straggler (late compilation, page-in): warmup should absorb it, but
+    a deadline-scheduled first call occasionally slips through.
+    """
+    from repro.runtime import failures as _failures  # runtime sits above
+
     fn = jax.jit(run)
-    for _ in range(max(warmup, 1)):
-        jax.block_until_ready(fn(params, x))
-    ts = []
-    for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(params, x))
-        ts.append(time.perf_counter() - t0)
+    for attempt in range(max(retries, 0) + 1):
+        try:
+            for _ in range(max(warmup, 1)):
+                jax.block_until_ready(fn(params, x))
+            ts = []
+            for _ in range(max(repeats, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(params, x))
+                ts.append(time.perf_counter() - t0)
+            break
+        except Exception as e:
+            if _failures.classify(e) is None or attempt >= max(retries, 0):
+                raise
+            warnings.warn(
+                f"measure_run: transient {type(e).__name__} during "
+                f"measurement (attempt {attempt + 1}/{max(retries, 0) + 1}):"
+                f" {e}; retrying", stacklevel=2)
+    if len(ts) > 2 and ts[0] > 10.0 * statistics.median(ts[1:]):
+        ts = ts[1:]  # discard the straggler first sample
     return float(statistics.median(ts))
 
 
@@ -450,11 +465,26 @@ def autotune_chain(spec, params, x, *, policy: KernelPolicy,
                 analytic_us=float(entry.get("analytic_us", 0.0)),
                 n_measured=0, key=key, cache_path=path)
 
-    def timed(cp: ChainPlan) -> float:
-        run = lowering.lower(spec, cp, policy)
-        return measure_run(run, params, x, warmup=warmup, repeats=repeats)
+    from repro.runtime import failures as _failures  # runtime sits above
 
-    t_base = timed(base_plan)
+    failed: list = []
+
+    def timed(cp: ChainPlan, label: str) -> float:
+        run = lowering.lower(spec, cp, policy)
+        try:
+            return measure_run(run, params, x, warmup=warmup,
+                               repeats=repeats)
+        except Exception as e:
+            # a candidate that cannot even run must lose, not abort the
+            # tune — fold the classified failure into the entry's record
+            # (unrecognized exceptions still propagate: those are bugs)
+            if _failures.classify(e) is None:
+                raise
+            failed.append({"candidate": label,
+                           "error": f"{type(e).__name__}: {e}"[:200]})
+            return float("inf")
+
+    t_base = timed(base_plan, "analytic")
     best, t_best = base_plan, t_base
     n_measured = 1
     geoms = _segment_geoms(spec.stages, base_plan, x.shape)
@@ -465,17 +495,35 @@ def autotune_chain(spec, params, x, *, policy: KernelPolicy,
             if cand == best.segments[si].plan:
                 continue
             cp = _with_segment_plan(best, si, cand)
-            t = timed(cp)
+            t = timed(cp, f"seg{si}:{cand.block_c}/{cand.block_co}"
+                          f"/{cand.slab_h}")
             n_measured += 1
             if t < t_best * (1.0 - REL_IMPROVEMENT):
                 best, t_best = cp, t
-    cache.put(key, {
+    if t_best == float("inf"):
+        # every candidate (incl. the analytic plan) failed to measure:
+        # nothing to persist — return the analytic plan unpersisted and let
+        # execution-time handling (the runtime ladder) deal with it
+        warnings.warn(
+            f"autotune: every candidate failed to measure for {key} "
+            f"({len(failed)} failures, first: "
+            f"{failed[0]['error'] if failed else '?'}); returning the "
+            "analytic plan unpersisted", stacklevel=2)
+        return AutotuneResult(plan=base_plan, cache_hit=False,
+                              measured_us=float("inf"),
+                              analytic_us=float("inf"),
+                              n_measured=n_measured, key=key,
+                              cache_path=path)
+    entry = {
         "signature": problem_signature(spec, x.shape, x.dtype, policy),
         "plan": serialize_chain_plan(best),
         "measured_us": t_best * 1e6,
         "analytic_us": t_base * 1e6,
         "n_measured": n_measured,
-    })
+    }
+    if failed:
+        entry["failed_candidates"] = failed
+    cache.put(key, entry)
     cache.save()
     return AutotuneResult(plan=best, cache_hit=False,
                           measured_us=t_best * 1e6,

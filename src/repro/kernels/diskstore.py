@@ -1,0 +1,82 @@
+"""Shared versioned JSON disk store (tune cache + runtime plan quarantine).
+
+``kernels/autotune.TuneCache`` and ``runtime/quarantine.Quarantine`` persist
+the same shape of artifact — a ``{key: entry}`` map keyed on a problem
+signature digest with a backend fingerprint baked in — and need the same
+durability discipline, so they share this one implementation:
+
+* **load** tolerates a missing file silently, but a corrupted or unreadable
+  one emits a warning naming the path and the parse error (a mystery full
+  re-tune is worse than a warning) and recovers as EMPTY — the store is a
+  performance/robustness artifact, never a correctness dependency;
+* **save** is merge-on-write: re-read whatever another process persisted
+  since our load, union the entry maps (our entries win conflicts), then
+  atomic ``tmp + os.replace`` — two concurrent writers cannot clobber each
+  other's entries and a crashed writer cannot corrupt a reader;
+* a ``version`` class attribute gates the schema: a file written at a
+  different version reads as empty (and is ignored by the merge), so layout
+  changes re-tune instead of mis-parsing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+
+class VersionedJsonStore:
+    """JSON-file-backed ``{key: entry}`` map with versioned, merge-on-write
+    atomic persistence.  Subclasses pin ``version`` and add typed accessors."""
+
+    version: int = 1
+
+    def __init__(self, path: str):
+        self.path = path
+        self.entries: dict = {}
+
+    @classmethod
+    def load(cls, path: str) -> "VersionedJsonStore":
+        store = cls(path)
+        store.entries = cls._read(path, warn=True)
+        return store
+
+    @classmethod
+    def _read(cls, path: str, *, warn: bool) -> dict:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (OSError, ValueError) as e:
+            if warn:
+                warnings.warn(
+                    f"{cls.__name__}: could not read {path} "
+                    f"({type(e).__name__}: {e}); recovering as empty — "
+                    "entries persisted there are lost until re-recorded",
+                    stacklevel=3)
+            return {}
+        if (isinstance(raw, dict) and raw.get("version") == cls.version
+                and isinstance(raw.get("entries"), dict)):
+            return raw["entries"]
+        return {}
+
+    def get(self, key: str):
+        entry = self.entries.get(key)
+        return entry if isinstance(entry, dict) else None
+
+    def put(self, key: str, entry: dict) -> None:
+        self.entries[key] = entry
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # merge-on-write: a concurrent writer's entries survive; ours win
+        # conflicts (we hold the newest measurement/failure for our keys)
+        disk = self._read(self.path, warn=False)
+        self.entries = {**disk, **self.entries}
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": self.version, "entries": self.entries},
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)

@@ -42,11 +42,20 @@ from repro.kernels.blocking import ChainPlan
 from repro.kernels.epilogue import apply_epilogue
 from repro.kernels.policy import DEFAULT_POLICY, KernelPolicy
 from repro.kernels.separable_fused import separable_fused_pallas
+from repro.runtime import failures, faultinject
 
 #: Per-stage parameter leaves the lowering consumes: PW stages take
 #: ``{"w": (Ci, Co)[, "b": (Co,)]}``, DW stages ``{"f": (Hf, Wf, C)[,
 #: "b": (C,)]}``; params are a sequence aligned with ``spec.stages``.
 PARAM_KEYS = {"pw": ("w", "b"), "dw": ("f", "b")}
+
+#: Fault-injection point per segment kind (repro.runtime.faultinject,
+#: DESIGN.md §9), checked before each dispatch; fused2 and fused3 share one
+#: point because they share the kernel.
+_INJECT = {"fused3": "lowering:separable_fused",
+           "fused2": "lowering:separable_fused",
+           "pw": "lowering:pwconv",
+           "dw": "lowering:dwconv2d"}
 
 
 def _cast(a, dtype):
@@ -121,39 +130,53 @@ def lower(spec, chain_plan: ChainPlan,
             last = si == len(segments) - 1
             k_out = odt if (last and not sep_res) else sdt
             seg_res = res if (chain_plan.residual_fused and last) else None
-            if seg.kind in ("fused3", "fused2"):
-                y = _run_fused(seg, stages, params, y, seg_res,
-                               impl=impl, interpret=interpret,
-                               stream_dtype=sdt, out_dtype=k_out)
-            elif seg.kind == "pw":
-                st = stages[seg.stages[0]]
-                p = params[seg.stages[0]]
-                y = ops.pwconv(
-                    y, p["w"].astype(sdt), _cast(p.get("b"), sdt),
-                    activation=st.activation,
-                    impl=impl, interpret=interpret,
-                    block_g=policy.block_g or seg.plan.block_g,
-                    block_co=policy.block_co or seg.plan.block_co,
-                    block_ci=policy.block_ci or seg.plan.block_c,
-                    vmem_budget=policy.vmem_budget,
-                    out_dtype=jnp.dtype(k_out).name,
-                )
-            else:  # "dw"
-                st = stages[seg.stages[0]]
-                p = params[seg.stages[0]]
-                # execute the planned channel block verbatim — re-planning
-                # here would silently ignore policy.vmem_budget (and defeat
-                # measured autotuning, which keys on the plan it timed)
-                y = ops.dwconv2d(
-                    y, p["f"].astype(sdt), stride=st.stride,
-                    padding=st.padding,
-                    impl=impl, interpret=interpret,
-                    block_c=seg.plan.block_c,
-                    vmem_budget=policy.vmem_budget,
-                )
-                y = apply_epilogue(y, _cast(p.get("b"), sdt), st.activation)
-                if last:
-                    y = y.astype(k_out)
+            try:
+                faultinject.check(_INJECT[seg.kind])
+                if seg.kind in ("fused3", "fused2"):
+                    y = _run_fused(seg, stages, params, y, seg_res,
+                                   impl=impl, interpret=interpret,
+                                   stream_dtype=sdt, out_dtype=k_out)
+                elif seg.kind == "pw":
+                    st = stages[seg.stages[0]]
+                    p = params[seg.stages[0]]
+                    y = ops.pwconv(
+                        y, p["w"].astype(sdt), _cast(p.get("b"), sdt),
+                        activation=st.activation,
+                        impl=impl, interpret=interpret,
+                        block_g=policy.block_g or seg.plan.block_g,
+                        block_co=policy.block_co or seg.plan.block_co,
+                        block_ci=policy.block_ci or seg.plan.block_c,
+                        vmem_budget=policy.vmem_budget,
+                        out_dtype=jnp.dtype(k_out).name,
+                    )
+                else:  # "dw"
+                    st = stages[seg.stages[0]]
+                    p = params[seg.stages[0]]
+                    # execute the planned channel block verbatim —
+                    # re-planning here would silently ignore
+                    # policy.vmem_budget (and defeat measured autotuning,
+                    # which keys on the plan it timed)
+                    y = ops.dwconv2d(
+                        y, p["f"].astype(sdt), stride=st.stride,
+                        padding=st.padding,
+                        impl=impl, interpret=interpret,
+                        block_c=seg.plan.block_c,
+                        vmem_budget=policy.vmem_budget,
+                    )
+                    y = apply_epilogue(y, _cast(p.get("b"), sdt),
+                                       st.activation)
+                    if last:
+                        y = y.astype(k_out)
+            except Exception as e:
+                # tag recognized backend failures with the segment that
+                # produced them (the runtime ladder keys its quarantine
+                # decision on this); anything else propagates unwrapped
+                f = failures.classify(e, segment_kind=seg.kind,
+                                      segment_index=si,
+                                      stage_indices=seg.stages)
+                if f is None or f is e:
+                    raise
+                raise f from e
         if sep_res:
             y = (y + res).astype(odt)
         return y

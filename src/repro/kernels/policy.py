@@ -136,6 +136,23 @@ class KernelPolicy:
     DESIGN.md §7).  The default :data:`NATIVE` streams at the input's dtype
     — every cast the lowering inserts is then a no-op, so fp32 behavior is
     bitwise-identical to the pre-policy code path.
+
+    on_failure: the runtime hardening knob (repro.runtime, DESIGN.md §9).
+    ``"degrade"`` (default) wraps execution in the runtime degradation
+    ladder: a classified backend failure (Mosaic/Pallas lowering rejection,
+    XLA compile/OOM, numeric-guard trip) quarantines the failing rung
+    persistently and retries one rung down (fused3 -> fused2 -> unfused ->
+    XLA reference), with bounded attempts and fallback telemetry; the
+    steady-state success path is unchanged (bitwise-identical outputs, zero
+    fallback events).  ``"raise"`` propagates the taxonomy error
+    (``runtime.failures.KernelFailure`` subclass, tagged with the failing
+    ChainPlan segment) to the caller instead — for tests, debugging, and
+    callers that own their own retry policy.
+
+    numeric_guard: ``True`` checks every chain/network output for
+    non-finite values after execution (host-side sync) and treats a trip
+    as a ``NumericalFailure`` — degraded or raised per ``on_failure``.
+    Off by default: the guard costs a device sync per call.
     """
     impl: str = "auto"
     interpret: bool = False
@@ -148,6 +165,11 @@ class KernelPolicy:
     block_co: Optional[int] = None
     block_ci: Optional[int] = None
     dtype_policy: DtypePolicy = NATIVE
+    on_failure: str = "degrade"
+    numeric_guard: bool = False
+
+    def __post_init__(self):
+        assert self.on_failure in ("degrade", "raise"), self.on_failure
 
     def resolved(self) -> str:
         return resolve_impl(self.impl)

@@ -1,0 +1,46 @@
+"""repro.runtime — fault-tolerant execution (DESIGN.md §9).
+
+The runtime counterpart of the §8 static verifier: a structured failure
+taxonomy (``failures``), a deterministic fault-injection harness
+(``faultinject``), a runtime degradation ladder with persistent plan
+quarantine (``ladder``, ``quarantine``, ``executor``) and fallback-event
+telemetry (``telemetry``).  ``core/chain.execute`` and
+``core/network.execute_network`` route here under the default
+``KernelPolicy(on_failure="degrade")``.
+
+Lazy attribute re-exports on purpose: ``kernels/lowering.py`` imports the
+submodules ``failures``/``faultinject`` (which triggers this package
+``__init__``), so nothing here may import the kernel or core layers at
+module scope.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "KernelFailure": "failures",
+    "LoweringFailure": "failures",
+    "CompileFailure": "failures",
+    "NumericalFailure": "failures",
+    "InjectedFault": "failures",
+    "classify": "failures",
+    "INJECTION_POINTS": "faultinject",
+    "RUNGS": "ladder",
+    "Quarantine": "quarantine",
+    "quarantine_path": "quarantine",
+    "execute_chain": "executor",
+    "run_network": "executor",
+    "runtime_report": "telemetry",
+    "reset_runtime_telemetry": "telemetry",
+    "fallback_count": "telemetry",
+}
+
+__all__ = sorted(_EXPORTS) + ["executor", "failures", "faultinject",
+                              "ladder", "quarantine", "telemetry"]
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.runtime' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.runtime.{mod}"), name)

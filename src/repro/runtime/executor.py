@@ -1,0 +1,190 @@
+"""Fault-tolerant execution (DESIGN.md §9): the degradation ladder driver.
+
+``core/chain.execute`` and ``core/network.execute_network`` route here
+whenever ``policy.on_failure == "degrade"`` (the default) or
+``policy.numeric_guard`` is on.  The steady-state path is the production
+path — resolve the plan exactly as the raw executor would (explicit plan,
+autotune winner, or analytic planner), run it, return — plus one
+``try/except``; only a classified failure enters the ladder:
+
+1. classify (``runtime/failures.py``) — unrecognized exceptions re-raise
+   unwrapped, ``on_failure="raise"`` propagates the taxonomy error;
+2. quarantine the rung the failure maps to (``runtime/ladder.py``) in the
+   persistent store (``runtime/quarantine.py``) — future processes skip it
+   with zero retries;
+3. re-plan one rung down and retry, bounded by the ladder length, each
+   fallback recorded in telemetry and warned about;
+4. the last rung runs the analytic plan on the XLA reference backend
+   (``kernels/ref`` numerics) with fault injection suppressed — the rung
+   of last resort cannot itself be injected away.
+
+The whole-network guard keeps the ONE-jitted-call fast path: on a
+classified failure of the composed program it falls back to per-block
+guarded chains — each block then quarantines its own problem, so the next
+``plan_network`` (this process or a fresh one) plans around the bad blocks
+and re-jits cleanly.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+
+from repro.runtime import failures, faultinject, ladder, quarantine, telemetry
+
+#: One attempt per ladder rung: fused3 -> fused2 -> unfused -> ref.
+MAX_ATTEMPTS = len(ladder.RUNGS)
+
+
+def _require_finite(y, *, scope: str) -> None:
+    """The ``policy.numeric_guard`` check: host-side all-finite test of the
+    output (forces a sync — that is the price of the guard)."""
+    if not bool(jnp.isfinite(y.astype(jnp.float32)).all()):
+        raise failures.NumericalFailure(
+            f"non-finite values in {scope} output (numeric_guard)")
+
+
+def execute_chain(spec, params, x, *, policy, chain_plan=None):
+    """Guarded ``chain.execute``: the ladder loop described above."""
+    from repro.core import chain  # lazy: core sits above the runtime layer
+    from repro.kernels import autotune, lowering
+
+    degrade = policy.on_failure == "degrade"
+    key = autotune.problem_key(spec, x.shape, x.dtype, policy)
+    qpath = quarantine.quarantine_path(policy)
+    q = quarantine.load(qpath)
+    banned = set(q.banned(key)) if degrade else set()
+    supplied = chain_plan
+    if (supplied is not None and banned
+            and ("unfused" in banned
+                 or any(s.kind in banned for s in supplied.segments))):
+        warnings.warn(
+            f"ignoring supplied chain_plan for {key}: it uses quarantined "
+            f"rungs ({sorted(banned)} banned in {qpath})",
+            RuntimeWarning, stacklevel=3)
+        supplied = None
+    if banned:
+        telemetry.record_quarantine_hit(scope="chain", key=key,
+                                        banned=banned)
+    cp = None
+    failure = None
+    for attempt in range(MAX_ATTEMPTS):
+        ref_mode = degrade and "unfused" in banned
+        run_policy = (dataclasses.replace(policy, impl="xla")
+                      if ref_mode else policy)
+        try:
+            if ref_mode:
+                # the reference rung executes the ANALYTIC plan on the XLA
+                # backend (= kernels/ref numerics): plan quarantine-blind
+                # (on_failure="raise" skips the consult) so the output is
+                # bitwise the reference oracle's, not a degraded layout
+                cp = chain.plan(spec, x.shape, dtype=x.dtype,
+                                policy=dataclasses.replace(
+                                    run_policy, autotune=False,
+                                    on_failure="raise"))
+            elif attempt == 0 and not banned:
+                # the production path: explicit plan / autotune / analytic
+                cp = chain.resolve_plan(spec, params, x, policy=policy,
+                                        chain_plan=supplied)
+            else:
+                # post-failure or quarantined: analytic re-plan; plan()
+                # consults the quarantine itself and skips banned rungs
+                cp = chain.plan(spec, x.shape, dtype=x.dtype,
+                                policy=dataclasses.replace(policy,
+                                                           autotune=False))
+            runner = lowering.lower(spec, cp, run_policy)
+            ctx = (faultinject.suppressed() if ref_mode
+                   else contextlib.nullcontext())
+            with ctx:
+                faultinject.check("compile:chain")
+                y = runner(params, x)
+                if policy.numeric_guard:
+                    y = faultinject.poison("numeric:chain", y)
+                    _require_finite(y, scope="chain")
+            if attempt:
+                telemetry.record_recovery(
+                    scope="chain", key=key,
+                    rung="ref" if ref_mode else ladder.plan_rung(cp))
+            return y
+        except Exception as e:
+            failure = failures.classify(e)
+            if failure is None:
+                raise  # not a recognized backend failure: never masked
+            if not degrade or ref_mode or attempt + 1 >= MAX_ATTEMPTS:
+                if failure is e:
+                    raise
+                raise failure from e
+            ban = ladder.ban_for_failure(failure, cp)
+            from_rung = ("ref" if ref_mode
+                         else ladder.plan_rung(cp) if cp is not None
+                         else "unknown")
+            banned.add(ban)
+            to_rung = ladder.next_rung(ban, banned)
+            q.add_failure(
+                key,
+                signature=autotune.problem_signature(spec, x.shape, x.dtype,
+                                                     policy),
+                ban=ban,
+                failure={**failure.describe(), "from_rung": from_rung})
+            q.save()
+            telemetry.record_fallback(
+                scope="chain", key=key, from_rung=from_rung,
+                to_rung=to_rung, failure_kind=failure.kind,
+                segment_kind=failure.segment_kind,
+                injected=failure.injected, error=str(failure))
+            warnings.warn(
+                f"runtime ladder: {failure.kind} failure at rung "
+                f"{from_rung} (segment {failure.segment_kind}) for chain "
+                f"{key}: {failure}; quarantined {ban!r} in {qpath}, "
+                f"retrying at {to_rung}", RuntimeWarning, stacklevel=3)
+    raise failure  # bounded attempts exhausted (unreachable: ref re-raises)
+
+
+def run_network(net, params, x, *, policy, network_plan=None,
+                block_dtype_policies=None):
+    """Guarded ``execute_network``: ONE jitted call on the happy path; on a
+    classified failure, recover with per-block guarded chains (each block
+    quarantining its own problem) so the next call re-plans and re-jits
+    around the bad blocks."""
+    from repro.core import network
+
+    degrade = policy.on_failure == "degrade"
+    try:
+        faultinject.check("compile:network")
+        y = network._execute_network_raw(
+            net, params, x, policy=policy, network_plan=network_plan,
+            block_dtype_policies=block_dtype_policies)
+        if policy.numeric_guard:
+            y = faultinject.poison("numeric:network", y)
+            _require_finite(y, scope="network")
+        return y
+    except Exception as e:
+        failure = failures.classify(e)
+        if failure is None:
+            raise
+        if not degrade:
+            if failure is e:
+                raise
+            raise failure from e
+        nkey = network.network_key(net, x.shape, x.dtype, policy,
+                                   block_dtype_policies)
+        telemetry.record_fallback(
+            scope="network", key=nkey, from_rung="network-jit",
+            to_rung="per-block", failure_kind=failure.kind,
+            segment_kind=failure.segment_kind, injected=failure.injected,
+            error=str(failure))
+        warnings.warn(
+            f"runtime ladder: {failure.kind} failure in the whole-network "
+            f"jitted call for {nkey}: {failure}; recovering per-block "
+            "(failing blocks will be quarantined and the next call "
+            "re-plans around them)", RuntimeWarning, stacklevel=3)
+        policies = network.resolve_block_policies(net, policy,
+                                                  block_dtype_policies)
+        y = x
+        for spec, p, pol in zip(net.blocks, params, policies):
+            y = execute_chain(spec, p, y, policy=pol)
+        telemetry.record_recovery(scope="network", key=nkey,
+                                  rung="per-block")
+        return y

@@ -1,0 +1,131 @@
+"""Structured failure taxonomy for the runtime layer (DESIGN.md §9).
+
+The §8 static verifier proves what it can before execution; everything it
+cannot reach — whether Mosaic actually accepts a lowering, whether XLA can
+compile the working set into real VMEM, whether the arithmetic stays finite
+— surfaces only at run time, as a zoo of backend exceptions.  This module
+names them:
+
+* :class:`LoweringFailure` — Pallas/Mosaic rejected the kernel (unsupported
+  op, layout, or reshape in the kernel body);
+* :class:`CompileFailure`  — XLA compilation or allocation failed
+  (RESOURCE_EXHAUSTED / OOM / VMEM pressure) or the backend died at run
+  time;
+* :class:`NumericalFailure` — the ``numeric_guard`` found non-finite values
+  in a kernel/chain output.
+
+Each failure is tagged with the :class:`~repro.kernels.blocking.ChainSegment`
+that produced it (kind + index + stage indices) so the degradation ladder
+(``runtime/ladder.py``) knows exactly which rung to quarantine.
+
+:func:`classify` is deliberately WHITELIST-based: only exception types the
+backend plausibly raises (``RuntimeError`` and subclasses — which includes
+jaxlib's ``XlaRuntimeError`` — ``NotImplementedError``, ``MemoryError``) are
+wrapped; everything else (``ValueError``, ``TypeError``, ``AssertionError``,
+``analysis.PlanVerificationError``, ...) answers ``None`` and propagates
+unwrapped, so the ladder can never mask a genuine bug in this codebase as a
+degradable backend fault.
+
+Stdlib-only on purpose: ``kernels/lowering.py`` imports this module, so it
+must sit below the whole kernel layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class KernelFailure(RuntimeError):
+    """Base of the taxonomy; ``kind`` names the class in telemetry,
+    quarantine records and ``runtime_report()``."""
+
+    kind = "kernel"
+
+    def __init__(self, message: str, *,
+                 segment_kind: Optional[str] = None,
+                 segment_index: Optional[int] = None,
+                 stage_indices: Optional[Sequence[int]] = None,
+                 original: Optional[BaseException] = None,
+                 injected: bool = False):
+        super().__init__(message)
+        self.segment_kind = segment_kind
+        self.segment_index = segment_index
+        self.stage_indices = (tuple(int(i) for i in stage_indices)
+                              if stage_indices is not None else None)
+        self.original = original
+        self.injected = bool(injected)
+
+    def describe(self) -> dict:
+        """JSON-serializable record for quarantine entries / telemetry."""
+        return {
+            "kind": self.kind,
+            "message": str(self)[:300],
+            "segment_kind": self.segment_kind,
+            "segment_index": self.segment_index,
+            "stage_indices": (list(self.stage_indices)
+                              if self.stage_indices is not None else None),
+            "original": (type(self.original).__name__
+                         if self.original is not None else None),
+            "injected": self.injected,
+        }
+
+
+class LoweringFailure(KernelFailure):
+    kind = "lowering"
+
+
+class CompileFailure(KernelFailure):
+    kind = "compile"
+
+
+class NumericalFailure(KernelFailure):
+    kind = "numeric"
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``runtime/faultinject.check`` at an armed injection point;
+    classified like the real failure it imitates (the message carries the
+    backend markers)."""
+
+    def __init__(self, message: str, *, point: str):
+        super().__init__(message)
+        self.point = point
+
+
+#: Message substrings identifying a Mosaic/Pallas lowering rejection.
+_LOWERING_MARKERS = ("mosaic", "pallas", "lowering", "unsupported",
+                     "not implemented", "unimplemented")
+
+
+def classify(exc: BaseException, *,
+             segment_kind: Optional[str] = None,
+             segment_index: Optional[int] = None,
+             stage_indices: Optional[Sequence[int]] = None,
+             ) -> Optional[KernelFailure]:
+    """Map a raised exception onto the taxonomy, or ``None`` when it is not
+    a recognized backend failure (the caller must then re-raise it as-is).
+
+    An already-classified :class:`KernelFailure` passes through, gaining
+    segment tags it lacks (the lowering tags at segment scope; outer layers
+    only add context, never overwrite it).
+    """
+    if isinstance(exc, KernelFailure):
+        if exc.segment_kind is None and segment_kind is not None:
+            exc.segment_kind = segment_kind
+            exc.segment_index = segment_index
+            exc.stage_indices = (tuple(int(i) for i in stage_indices)
+                                 if stage_indices is not None else None)
+        return exc
+    catchable = isinstance(exc, (RuntimeError, NotImplementedError,
+                                 MemoryError))
+    if not catchable:
+        return None
+    ctx = dict(segment_kind=segment_kind, segment_index=segment_index,
+               stage_indices=stage_indices, original=exc,
+               injected=isinstance(exc, InjectedFault))
+    msg = str(exc).lower()
+    if (isinstance(exc, NotImplementedError)
+            or any(m in msg for m in _LOWERING_MARKERS)):
+        return LoweringFailure(str(exc), **ctx)
+    # XlaRuntimeError (a RuntimeError subclass), RESOURCE_EXHAUSTED/OOM and
+    # any other backend runtime death: the compile/execute class
+    return CompileFailure(str(exc), **ctx)

@@ -1,0 +1,169 @@
+"""Deterministic fault-injection harness (DESIGN.md §9).
+
+The degradation ladder exists for failures only real TPU hardware produces
+— which CPU CI never sees.  This module closes that testability gap with
+NAMED injection points compiled into the dispatch path: tests and the
+``--fault-inject`` benchmark flag arm a point, the next time execution
+passes it a :class:`~repro.runtime.failures.InjectedFault` is raised (or,
+for the ``numeric:*`` points, the output is NaN-poisoned so the numeric
+guard genuinely detects non-finite values, not a simulation of detecting
+them).  Disarmed points cost one dict lookup — nothing is patched or
+monkeyed, so the injected control flow IS the production control flow.
+
+Determinism: a point fires exactly ``times`` times (``PERSISTENT`` = every
+pass), counted per arm; :func:`fired_counts` lets CI assert the telemetry
+records *exactly* the injected fallbacks.  :func:`suppressed` marks the
+reference rung: the ladder's last rung must not be injectable, or a
+persistent fault could make the fallback of last resort fail too.
+
+Stdlib-only (``kernels/lowering.py`` imports this; the array op in
+:func:`poison` uses only methods of the array passed in).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.runtime.failures import InjectedFault
+
+#: The injection-point catalog (DESIGN.md §9).  Arming any other name is a
+#: ValueError — a typo must fail the test arming it, not silently no-op.
+INJECTION_POINTS = {
+    "lowering:separable_fused":
+        "fused2/fused3 segment dispatch (kernels/lowering._run_fused; the "
+        "two rungs share the kernel, so they share the point)",
+    "lowering:pwconv":
+        "standalone pw segment dispatch (kernels/lowering.lower)",
+    "lowering:dwconv2d":
+        "standalone dw segment dispatch (kernels/lowering.lower)",
+    "compile:chain":
+        "chain runner invocation (runtime/executor.execute_chain)",
+    "compile:network":
+        "whole-network jitted invocation (runtime/executor.run_network)",
+    "numeric:chain":
+        "NaN-poisons the chain output before the numeric guard",
+    "numeric:network":
+        "NaN-poisons the network output before the numeric guard",
+}
+
+#: ``times`` value meaning "fire on every pass until disarmed".
+PERSISTENT = -1
+
+
+@dataclasses.dataclass
+class _Fault:
+    point: str
+    times: int
+    fired: int = 0
+    message: Optional[str] = None
+
+    @property
+    def live(self) -> bool:
+        return self.times < 0 or self.fired < self.times
+
+
+_faults: Dict[str, _Fault] = {}
+_local = threading.local()
+
+
+def arm(point: str, times: int = 1, message: Optional[str] = None) -> None:
+    """Arm ``point`` to fire ``times`` times (:data:`PERSISTENT` forever)."""
+    if point not in INJECTION_POINTS:
+        raise ValueError(
+            f"unknown injection point {point!r}; catalog: "
+            f"{sorted(INJECTION_POINTS)}")
+    _faults[point] = _Fault(point, times=int(times), message=message)
+
+
+def disarm(point: str) -> None:
+    _faults.pop(point, None)
+
+
+def disarm_all() -> None:
+    _faults.clear()
+
+
+def armed_points() -> Tuple[str, ...]:
+    return tuple(sorted(p for p, f in _faults.items() if f.live))
+
+
+def fired_counts() -> Dict[str, int]:
+    """{point: times fired} for every point armed since the last disarm."""
+    return {p: f.fired for p, f in _faults.items()}
+
+
+def _suppressed() -> bool:
+    return getattr(_local, "depth", 0) > 0
+
+
+@contextlib.contextmanager
+def suppressed():
+    """No point fires inside — the executor wraps the reference rung in
+    this, so a persistent fault cannot take down the rung of last resort."""
+    _local.depth = getattr(_local, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _local.depth -= 1
+
+
+@contextlib.contextmanager
+def injected(point: str, times: int = 1, message: Optional[str] = None):
+    """Scoped arm: arms on enter, disarms on exit (test convenience)."""
+    arm(point, times=times, message=message)
+    try:
+        yield
+    finally:
+        disarm(point)
+
+
+def _default_message(point: str) -> str:
+    # imitate the real failure class the point stands in for: the markers
+    # steer failures.classify the same way the genuine backend error would
+    if point.startswith("lowering:"):
+        return ("Mosaic lowering failed: unsupported operation in kernel "
+                f"body (fault-injected at {point})")
+    return ("RESOURCE_EXHAUSTED: out of memory while compiling "
+            f"(fault-injected at {point})")
+
+
+def check(point: str) -> None:
+    """Raise :class:`InjectedFault` when ``point`` is armed and live; a
+    no-op (one dict lookup) otherwise.  Suppressed inside
+    :func:`suppressed`."""
+    f = _faults.get(point)
+    if f is None or _suppressed() or not f.live:
+        return
+    f.fired += 1
+    raise InjectedFault(f.message or _default_message(point), point=point)
+
+
+def poison(point: str, y):
+    """NaN-poison one element of ``y`` when ``point`` is armed — the
+    ``numeric:*`` points: the guard then detects a REAL non-finite output."""
+    f = _faults.get(point)
+    if f is None or _suppressed() or not f.live:
+        return y
+    f.fired += 1
+    return y.at[tuple(0 for _ in y.shape)].set(float("nan"))
+
+
+def arm_from_spec(spec: str) -> Tuple[str, ...]:
+    """Arm from a CLI string: comma-separated ``point[:times]`` items,
+    persistent when ``times`` is omitted.  Returns the armed point names."""
+    points = []
+    for item in str(spec).split(","):
+        item = item.strip()
+        if not item:
+            continue
+        name, times = item, PERSISTENT
+        # point names contain one ':' (category:site); a second one is the
+        # fire count
+        if item.count(":") == 2:
+            name, _, t = item.rpartition(":")
+            times = int(t)
+        arm(name, times=times)
+        points.append(name)
+    return tuple(points)

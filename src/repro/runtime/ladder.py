@@ -1,0 +1,56 @@
+"""The runtime degradation ladder (DESIGN.md §9).
+
+Mirrors the planner's analytic feasibility ladder (3-fused -> 2-fused ->
+unfused, ``core/chain.plan``) with one extra rung the planner cannot
+express: the XLA reference path (``kernels/ref``), which trades all of the
+paper's data-movement wins for the guarantee of running anywhere.
+
+    RUNGS = fused3 -> fused2 -> unfused -> ref
+
+A failure maps to a BAN — the rung the quarantine removes — from the
+segment tag the taxonomy carries:
+
+* a ``fused3`` / ``fused2`` segment failure bans exactly that fusion kind
+  (the planner's next walk degrades the window one step);
+* a standalone ``pw`` / ``dw`` segment failure bans ``unfused`` — the
+  Pallas kernels themselves are unusable for this problem, so the executor
+  escalates straight to the reference rung;
+* an untagged failure (chain-scope compile error, numeric-guard trip on
+  the final output) bans the highest rung the failing plan actually used.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+RUNGS = ("fused3", "fused2", "unfused", "ref")
+
+
+def plan_rung(cp) -> str:
+    """The ladder rung a ChainPlan executes at: its highest fusion kind."""
+    kinds = {seg.kind for seg in cp.segments}
+    if "fused3" in kinds:
+        return "fused3"
+    if "fused2" in kinds:
+        return "fused2"
+    return "unfused"
+
+
+def ban_for_failure(failure, cp=None) -> str:
+    """Which rung to quarantine for this classified failure (see module
+    docstring); ``cp`` is the plan that was executing, for untagged
+    failures."""
+    if failure.segment_kind in ("fused3", "fused2"):
+        return failure.segment_kind
+    if failure.segment_kind in ("pw", "dw"):
+        return "unfused"
+    return plan_rung(cp) if cp is not None else "unfused"
+
+
+def next_rung(ban: str, banned) -> str:
+    """The rung the retry lands on after banning ``ban``, given the full
+    banned set (for telemetry/warning messages)."""
+    start = RUNGS.index(ban) + 1 if ban in RUNGS else len(RUNGS) - 1
+    for r in RUNGS[start:]:
+        if r == "ref" or r not in banned:
+            return r
+    return "ref"

@@ -1,0 +1,143 @@
+"""Persistent plan quarantine (DESIGN.md §9): failed rungs stay failed.
+
+When the degradation ladder quarantines a rung for a problem, the decision
+must outlive the process — the whole point is that the NEXT run (a fresh
+server, a re-launched benchmark) skips the known-bad plan with zero retry
+attempts instead of re-failing it.  The store therefore follows the tune
+cache's exact discipline:
+
+* same key: ``kernels/autotune.problem_key`` — spec stages + input
+  shape/dtype + dtype policy + VMEM budget + **backend fingerprint**, so a
+  rung that failed on one backend is never banned on another;
+* same persistence: ``kernels/diskstore.VersionedJsonStore`` — versioned,
+  merge-on-write atomic saves, warn-and-recover loads;
+* same placement: a ``quarantine.json`` sibling of the policy's tune cache
+  (or ``$REPRO_QUARANTINE`` / ``~/.cache/repro/quarantine.json``).
+
+Entry format (one per problem key)::
+
+    {"signature": {...problem_signature...},
+     "banned": ["fused3", ...],            # subset of BANNABLE
+     "failures": [{...KernelFailure.describe() + from_rung...}, ...]}
+
+``banned`` names the LADDER RUNGS the planner must skip: ``fused3`` /
+``fused2`` remove those fusion windows from ``core/chain.plan``'s walk;
+``unfused`` means even the standalone kernels failed and the executor goes
+straight to the XLA reference rung.
+
+A small mtime/size-keyed memo makes the steady-state consult (every
+``plan()`` call in degrade mode) one ``os.stat``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import FrozenSet, Optional, Sequence
+
+from repro.kernels import autotune as _autotune
+from repro.kernels.diskstore import VersionedJsonStore
+
+QUARANTINE_VERSION = 1
+
+#: Rungs an entry may ban (the "ref" rung is never bannable — it is the
+#: fallback of last resort and fault injection is suppressed around it).
+BANNABLE = ("fused3", "fused2", "unfused")
+
+
+def default_quarantine_path() -> str:
+    """$REPRO_QUARANTINE, else ~/.cache/repro/quarantine.json."""
+    env = os.environ.get("REPRO_QUARANTINE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "quarantine.json")
+
+
+def quarantine_path(policy) -> str:
+    """The store lives alongside the policy's tune cache when one is
+    pinned (same directory, same lifecycle); else the default path."""
+    if policy.tune_cache:
+        d = os.path.dirname(policy.tune_cache)
+        return os.path.join(d or ".", "quarantine.json")
+    return default_quarantine_path()
+
+
+class Quarantine(VersionedJsonStore):
+    version = QUARANTINE_VERSION
+
+    def banned(self, key: str) -> FrozenSet[str]:
+        entry = self.entries.get(key)
+        if not isinstance(entry, dict):
+            return frozenset()
+        banned = entry.get("banned")
+        if not isinstance(banned, list):
+            return frozenset()
+        return frozenset(b for b in banned if b in BANNABLE)
+
+    def add_failure(self, key: str, *, signature: dict, ban: str,
+                    failure: dict) -> None:
+        assert ban in BANNABLE, ban
+        entry = self.entries.get(key)
+        if not isinstance(entry, dict):
+            entry = {"signature": signature, "banned": [], "failures": []}
+        entry["banned"] = sorted(set(entry.get("banned", [])) | {ban})
+        entry.setdefault("failures", []).append(dict(failure))
+        entry["failures"] = entry["failures"][-16:]
+        self.entries[key] = entry
+
+    def save(self) -> None:
+        super().save()
+        _memo_store(self.path, self)
+
+
+# -- steady-state load memo (mtime/size keyed, one os.stat per consult) -----
+
+_MEMO_LOCK = threading.Lock()
+_MEMO: dict = {}
+
+
+def _stat_sig(path: str):
+    try:
+        st = os.stat(path)
+        return (st.st_mtime_ns, st.st_size)
+    except OSError:
+        return None
+
+
+def load(path: str) -> Quarantine:
+    sig = _stat_sig(path)
+    with _MEMO_LOCK:
+        hit = _MEMO.get(path)
+        if hit is not None and hit[0] == sig:
+            return hit[1]
+    q = Quarantine.load(path)
+    with _MEMO_LOCK:
+        _MEMO[path] = (sig, q)
+    return q
+
+
+def _memo_store(path: str, q: Quarantine) -> None:
+    with _MEMO_LOCK:
+        _MEMO[path] = (_stat_sig(path), q)
+
+
+def clear_memo() -> None:
+    with _MEMO_LOCK:
+        _MEMO.clear()
+
+
+def banned_kinds(spec, x_shape: Sequence[int], dtype,
+                 policy) -> FrozenSet[str]:
+    """The rungs quarantined for this exact problem on this backend —
+    what ``core/chain.plan`` skips and the executor starts below.  Records
+    a quarantine-hit telemetry event when non-empty (the visible trace of
+    a plan being steered around a known-bad rung)."""
+    q = load(quarantine_path(policy))
+    if not q.entries:
+        return frozenset()
+    key = _autotune.problem_key(spec, x_shape, dtype, policy)
+    banned = q.banned(key)
+    if banned:
+        from repro.runtime import telemetry
+        telemetry.record_quarantine_hit(scope="plan", key=key, banned=banned)
+    return banned

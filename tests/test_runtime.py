@@ -1,0 +1,646 @@
+"""repro.runtime (DESIGN.md §9): failure taxonomy, fault injection, the
+degradation ladder, plan quarantine persistence, and fallback telemetry.
+
+Everything runs on CPU via the deterministic fault-injection harness — the
+ladder rungs, quarantine round-trips and numeric guards that only real
+hardware failures would otherwise exercise.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chain, network
+from repro.kernels import autotune
+from repro.kernels.diskstore import VersionedJsonStore
+from repro.kernels.policy import DtypePolicy, KernelPolicy
+from repro.runtime import (executor, failures, faultinject, ladder,
+                           quarantine, telemetry)
+
+BF16_REL_TOL = 5e-2
+
+
+@pytest.fixture(autouse=True)
+def _clean_runtime():
+    faultinject.disarm_all()
+    telemetry.reset_runtime_telemetry()
+    quarantine.clear_memo()
+    network.clear_network_cache()
+    yield
+    faultinject.disarm_all()
+    telemetry.reset_runtime_telemetry()
+    quarantine.clear_memo()
+    network.clear_network_cache()
+
+
+def _pol(tmp_path, **kw):
+    """Policy pinning the tune cache (and therefore the quarantine store)
+    inside the test's tmp dir."""
+    return KernelPolicy(impl="xla", tune_cache=str(tmp_path / "tune.json"),
+                        **kw)
+
+
+def _ir_spec():
+    return chain.inverted_residual_spec(c_in=8, c_out=8, expand=2)
+
+
+def _chain_data(spec):
+    params = chain.init_chain(jax.random.PRNGKey(0), spec, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+    return params, x
+
+
+def _tiny_net():
+    return network.NetworkSpec(name="tiny3", c_in=8, blocks=(
+        chain.separable_block_spec(16),
+        chain.inverted_residual_spec(16, 16, expand=2),
+        chain.separable_block_spec(8, stride=2),
+    ))
+
+
+def _oracle_chain(spec, params, x, pol):
+    with faultinject.suppressed():
+        return np.asarray(chain.execute(
+            spec, params, x,
+            policy=dataclasses.replace(pol, impl="xla", on_failure="raise",
+                                       numeric_guard=False,
+                                       dtype_policy=DtypePolicy())),
+            np.float32)
+
+
+def _ban(pol, spec, shape, dtype, *bans):
+    """Pre-seed the policy's quarantine store with bans for this problem."""
+    qp = quarantine.quarantine_path(pol)
+    q = quarantine.Quarantine.load(qp)
+    key = autotune.problem_key(spec, shape, dtype, pol)
+    for b in bans:
+        q.add_failure(key, signature={}, ban=b,
+                      failure={"kind": "test", "message": "seeded"})
+    q.save()
+    return key
+
+
+# ---------------------------------------------------------------------------
+# failures.classify: whitelist taxonomy
+# ---------------------------------------------------------------------------
+
+def test_classify_whitelist():
+    assert failures.classify(ValueError("same")) is None
+    assert failures.classify(TypeError("x")) is None
+    assert failures.classify(AssertionError("x")) is None
+    f = failures.classify(RuntimeError("Mosaic lowering failed: op"))
+    assert isinstance(f, failures.LoweringFailure)
+    f = failures.classify(NotImplementedError("no lowering rule"))
+    assert isinstance(f, failures.LoweringFailure)
+    f = failures.classify(RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+    assert isinstance(f, failures.CompileFailure)
+    assert isinstance(failures.classify(MemoryError()),
+                      failures.CompileFailure)
+
+
+def test_classify_tags_and_passthrough():
+    f = failures.classify(RuntimeError("pallas failure"),
+                          segment_kind="fused3", segment_index=0,
+                          stage_indices=(0, 1, 2))
+    assert (f.segment_kind, f.segment_index, f.stage_indices) == \
+        ("fused3", 0, (0, 1, 2))
+    assert isinstance(f.original, RuntimeError)
+    # passthrough: an already-tagged failure keeps its tags
+    g = failures.classify(f, segment_kind="pw", segment_index=9)
+    assert g is f and g.segment_kind == "fused3"
+    d = f.describe()
+    assert d["kind"] == "lowering" and d["segment_kind"] == "fused3"
+
+
+def test_plan_verification_error_never_classified():
+    from repro.analysis import PlanVerificationError, Report
+    assert failures.classify(PlanVerificationError(Report())) is None
+
+
+# ---------------------------------------------------------------------------
+# faultinject: determinism, suppression, CLI spec parsing
+# ---------------------------------------------------------------------------
+
+def test_arm_unknown_point_raises():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        faultinject.arm("lowering:nope")
+
+
+def test_times_and_fired_counts():
+    faultinject.arm("compile:chain", times=2)
+    for _ in range(2):
+        with pytest.raises(failures.InjectedFault):
+            faultinject.check("compile:chain")
+    faultinject.check("compile:chain")  # exhausted: no-op
+    assert faultinject.fired_counts()["compile:chain"] == 2
+    assert faultinject.armed_points() == ()
+
+
+def test_suppressed_blocks_firing():
+    faultinject.arm("compile:chain", times=faultinject.PERSISTENT)
+    with faultinject.suppressed():
+        faultinject.check("compile:chain")
+    with pytest.raises(failures.InjectedFault):
+        faultinject.check("compile:chain")
+
+
+def test_arm_from_spec():
+    pts = faultinject.arm_from_spec(
+        "lowering:pwconv, compile:network:3 ,numeric:chain")
+    assert pts == ("lowering:pwconv", "compile:network", "numeric:chain")
+    assert faultinject._faults["compile:network"].times == 3
+    assert faultinject._faults["lowering:pwconv"].times == \
+        faultinject.PERSISTENT
+
+
+def test_injected_context_disarms():
+    with faultinject.injected("compile:chain"):
+        assert "compile:chain" in faultinject.armed_points()
+    assert faultinject.armed_points() == ()
+
+
+# ---------------------------------------------------------------------------
+# ladder semantics
+# ---------------------------------------------------------------------------
+
+def test_ladder_rung_mapping(tmp_path):
+    pol = _pol(tmp_path)
+    spec = _ir_spec()
+    cp = chain.plan(spec, (1, 8, 8, 8), policy=pol)
+    assert ladder.plan_rung(cp) == "fused3"
+    f3 = failures.LoweringFailure("x", segment_kind="fused3")
+    pw = failures.LoweringFailure("x", segment_kind="pw")
+    untagged = failures.CompileFailure("x")
+    assert ladder.ban_for_failure(f3) == "fused3"
+    assert ladder.ban_for_failure(pw) == "unfused"
+    assert ladder.ban_for_failure(untagged, cp) == "fused3"
+    assert ladder.next_rung("fused3", {"fused3"}) == "fused2"
+    assert ladder.next_rung("fused2", {"fused3", "fused2"}) == "unfused"
+    assert ladder.next_rung("unfused", {"unfused"}) == "ref"
+
+
+# ---------------------------------------------------------------------------
+# diskstore satellites: warn-on-corrupt load, merge-on-write save
+# ---------------------------------------------------------------------------
+
+def test_corrupt_store_warns_and_recovers(tmp_path):
+    path = str(tmp_path / "tune.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.warns(UserWarning, match="could not read"):
+        cache = autotune.TuneCache.load(path)
+    assert cache.entries == {}
+    cache.put("k", {"v": 1})
+    cache.save()  # must not warn/raise: save re-reads with warn=False
+    assert autotune.TuneCache.load(path).get("k") == {"v": 1}
+
+
+def test_merge_on_write_preserves_concurrent_entries(tmp_path):
+    path = str(tmp_path / "tune.json")
+    a = autotune.TuneCache.load(path)
+    b = autotune.TuneCache.load(path)
+    a.put("ka", {"v": "a"})
+    a.save()
+    b.put("kb", {"v": "b"})
+    b.save()  # must union with a's entry, not clobber the file
+    c = autotune.TuneCache.load(path)
+    assert c.get("ka") == {"v": "a"} and c.get("kb") == {"v": "b"}
+
+
+def test_version_gate_reads_other_version_as_empty(tmp_path):
+    path = str(tmp_path / "store.json")
+
+    class V9(VersionedJsonStore):
+        version = 9
+
+    s = V9(path)
+    s.put("k", {"v": 1})
+    s.save()
+    assert VersionedJsonStore.load(path).entries == {}  # version 1 reader
+    assert V9.load(path).get("k") == {"v": 1}
+
+
+def test_quarantine_store_roundtrip(tmp_path):
+    path = str(tmp_path / "quarantine.json")
+    q = quarantine.Quarantine.load(path)
+    q.add_failure("k1", signature={"s": 1}, ban="fused3",
+                  failure={"kind": "lowering"})
+    q.add_failure("k1", signature={"s": 1}, ban="unfused",
+                  failure={"kind": "compile"})
+    with pytest.raises(AssertionError):
+        q.add_failure("k1", signature={}, ban="ref", failure={})
+    q.save()
+    q2 = quarantine.Quarantine.load(path)
+    assert q2.banned("k1") == frozenset({"fused3", "unfused"})
+    assert q2.banned("missing") == frozenset()
+    assert len(q2.entries["k1"]["failures"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# measure_run satellites: transient retry, outlier discard
+# ---------------------------------------------------------------------------
+
+def test_measure_run_retries_transient():
+    state = {"raised": False}
+
+    def run(p, x):
+        if not state["raised"]:
+            state["raised"] = True
+            raise RuntimeError("RESOURCE_EXHAUSTED: transient")
+        return x
+
+    x = jnp.ones((4,))
+    with pytest.warns(UserWarning, match="transient"):
+        t = autotune.measure_run(run, None, x, warmup=1, repeats=3)
+    assert t >= 0.0
+
+
+def test_measure_run_bounded_retries_then_raises():
+    def run(p, x):
+        raise RuntimeError("RESOURCE_EXHAUSTED: always")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+            autotune.measure_run(run, None, jnp.ones((4,)), retries=1)
+
+
+def test_measure_run_unrecognized_propagates_immediately():
+    def run(p, x):
+        raise AssertionError("a genuine bug")
+
+    with pytest.raises(AssertionError, match="genuine bug"):
+        autotune.measure_run(run, None, jnp.ones((4,)))
+
+
+def test_measure_run_discards_straggler_first_sample(monkeypatch):
+    # deltas: first timed sample 1.0s, the rest 0.01s -> the straggler is
+    # >10x the median of the rest and must be discarded
+    seq = iter([0.0, 1.0, 1.0, 1.01, 1.01, 1.02, 1.02, 1.03, 1.03, 1.04])
+    monkeypatch.setattr(autotune, "time",
+                        types.SimpleNamespace(perf_counter=lambda:
+                                              next(seq)))
+    t = autotune.measure_run(lambda p, x: x, None, jnp.ones((4,)),
+                             warmup=1, repeats=5)
+    assert t == pytest.approx(0.01, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# autotune_chain: failed candidates folded, all-fail unpersisted
+# ---------------------------------------------------------------------------
+
+def test_autotune_folds_failed_candidate(tmp_path, monkeypatch):
+    spec = chain.SeparableSpec((chain.PW(16),))
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path, autotune=True)
+    base = chain.plan(spec, x.shape,
+                      policy=dataclasses.replace(pol, autotune=False))
+    calls = {"n": 0}
+
+    def fake_measure(run, p, xx, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:  # the first non-base candidate dies
+            raise RuntimeError("RESOURCE_EXHAUSTED: candidate died")
+        return 1.0
+
+    monkeypatch.setattr(autotune, "measure_run", fake_measure)
+    r = autotune.autotune_chain(spec, params, x, policy=pol, base_plan=base)
+    assert not r.cache_hit and r.plan == base
+    entry = autotune.TuneCache.load(pol.tune_cache).get(r.key)
+    assert entry is not None
+    fc = entry["failed_candidates"]
+    assert len(fc) == 1 and "RESOURCE_EXHAUSTED" in fc[0]["error"]
+
+
+def test_autotune_all_fail_returns_base_unpersisted(tmp_path, monkeypatch):
+    spec = chain.SeparableSpec((chain.PW(16),))
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path, autotune=True)
+    base = chain.plan(spec, x.shape,
+                      policy=dataclasses.replace(pol, autotune=False))
+
+    def fake_measure(run, p, xx, **kw):
+        raise RuntimeError("RESOURCE_EXHAUSTED: device is gone")
+
+    monkeypatch.setattr(autotune, "measure_run", fake_measure)
+    with pytest.warns(UserWarning, match="every candidate failed"):
+        r = autotune.autotune_chain(spec, params, x, policy=pol,
+                                    base_plan=base)
+    assert r.plan == base and r.measured_us == float("inf")
+    assert autotune.TuneCache.load(pol.tune_cache).get(r.key) is None
+
+
+def test_lookup_cached_plan_drops_quarantined_winner(tmp_path):
+    spec = _ir_spec()
+    shape = (1, 8, 8, 8)
+    pol = _pol(tmp_path, autotune=True)
+    base = chain.plan(spec, shape,
+                      policy=dataclasses.replace(pol, autotune=False,
+                                                 on_failure="raise"))
+    key = autotune.problem_key(spec, shape, jnp.float32, pol)
+    cache = autotune.TuneCache.load(pol.tune_cache)
+    cache.put(key, {"signature": {}, "plan":
+                    autotune.serialize_chain_plan(base),
+                    "measured_us": 1.0, "analytic_us": 1.0})
+    cache.save()
+    assert autotune.lookup_cached_plan(spec, shape, jnp.float32,
+                                       pol) is not None
+    _ban(pol, spec, shape, jnp.float32, "fused3")
+    with pytest.warns(UserWarning, match="quarantined rungs"):
+        assert autotune.lookup_cached_plan(spec, shape, jnp.float32,
+                                           pol) is None
+    # raise-mode callers opt out of the ladder and keep the tuned winner
+    assert autotune.lookup_cached_plan(
+        spec, shape, jnp.float32,
+        dataclasses.replace(pol, on_failure="raise")) is not None
+
+
+# ---------------------------------------------------------------------------
+# plan(): quarantine steers the analytic walk
+# ---------------------------------------------------------------------------
+
+def test_plan_consults_quarantine(tmp_path):
+    spec = _ir_spec()
+    shape = (1, 8, 8, 8)
+    pol = _pol(tmp_path)
+    assert [s.kind for s in chain.plan(spec, shape, policy=pol).segments] \
+        == ["fused3"]
+    _ban(pol, spec, shape, jnp.float32, "fused3")
+    kinds = [s.kind for s in chain.plan(spec, shape, policy=pol).segments]
+    assert "fused3" not in kinds and "fused2" in kinds
+    # raise-mode planning is quarantine-blind (the ladder opt-out)
+    kinds = [s.kind for s in chain.plan(
+        spec, shape,
+        policy=dataclasses.replace(pol, on_failure="raise")).segments]
+    assert kinds == ["fused3"]
+    assert telemetry.runtime_report()["quarantine_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the ladder matrix: every rung x {fp32, bf16} x {chain, network}
+# ---------------------------------------------------------------------------
+
+#: (case name, points to arm {point: times}, rung the recovery lands on)
+_MATRIX = [
+    ("fused-transient", {"lowering:separable_fused": 1}, "fused2"),
+    ("fused-persistent",
+     {"lowering:separable_fused": faultinject.PERSISTENT}, "unfused"),
+    ("all-lowering",
+     {p: faultinject.PERSISTENT for p in
+      ("lowering:separable_fused", "lowering:pwconv",
+       "lowering:dwconv2d")}, "ref"),
+    ("compile-transient", {"compile:chain": 1}, None),
+]
+
+
+@pytest.mark.parametrize("dname", ["fp32", "bf16"])
+@pytest.mark.parametrize("case,points,_rung",
+                         _MATRIX, ids=[c[0] for c in _MATRIX])
+def test_ladder_matrix_chain(tmp_path, case, points, _rung, dname):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    dp = DtypePolicy(stream="bfloat16") if dname == "bf16" else DtypePolicy()
+    pol = _pol(tmp_path, dtype_policy=dp, numeric_guard=True)
+    oracle = _oracle_chain(spec, params, x, pol)
+    for p, t in points.items():
+        faultinject.arm(p, times=t)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y = chain.execute(spec, params, x, policy=pol)
+    got = np.asarray(y, np.float32)
+    if dname == "fp32" and case == "all-lowering":
+        # every rung failed -> the reference rung IS the oracle: bitwise
+        np.testing.assert_array_equal(got, oracle)
+    else:
+        tol = BF16_REL_TOL if dname == "bf16" else 1e-5
+        rel = np.abs(got - oracle).max() / (np.abs(oracle).max() + 1e-30)
+        assert rel < tol, (case, dname, rel)
+    rep = telemetry.runtime_report()
+    assert rep["fallbacks"] > 0
+    assert rep["fallbacks"] == rep["injected_fallbacks"]
+    assert rep["recoveries"] >= 1
+
+
+@pytest.mark.parametrize("dname", ["fp32", "bf16"])
+@pytest.mark.parametrize("case,points,_rung",
+                         _MATRIX, ids=[c[0] for c in _MATRIX])
+def test_ladder_matrix_network(tmp_path, case, points, _rung, dname):
+    net = _tiny_net()
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    dp = DtypePolicy(stream="bfloat16") if dname == "bf16" else DtypePolicy()
+    pol = _pol(tmp_path, dtype_policy=dp, numeric_guard=True)
+    if case == "compile-transient":
+        points = {"compile:network": 1}
+    with faultinject.suppressed():
+        oracle = x
+        for spec, p in zip(net.blocks, params):
+            oracle = chain.execute(
+                spec, p, oracle,
+                policy=dataclasses.replace(pol, on_failure="raise",
+                                           numeric_guard=False,
+                                           dtype_policy=DtypePolicy()))
+        oracle = np.asarray(oracle, np.float32)
+    for p, t in points.items():
+        faultinject.arm(p, times=t)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y = network.execute_network(net, params, x, policy=pol)
+    got = np.asarray(y, np.float32)
+    if dname == "fp32" and case == "all-lowering":
+        np.testing.assert_array_equal(got, oracle)
+    else:
+        tol = BF16_REL_TOL if dname == "bf16" else 1e-5
+        rel = np.abs(got - oracle).max() / (np.abs(oracle).max() + 1e-30)
+        assert rel < tol, (case, dname, rel)
+    rep = telemetry.runtime_report()
+    assert rep["fallbacks"] > 0
+    assert rep["fallbacks"] == rep["injected_fallbacks"]
+
+
+# ---------------------------------------------------------------------------
+# on_failure="raise": the taxonomy error propagates with its tags
+# ---------------------------------------------------------------------------
+
+def test_raise_mode_propagates_tagged_failure(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path, on_failure="raise")
+    faultinject.arm("lowering:separable_fused", times=1)
+    with pytest.raises(failures.LoweringFailure) as ei:
+        chain.execute(spec, params, x, policy=pol)
+    e = ei.value
+    assert e.segment_kind == "fused3" and e.injected
+    assert isinstance(e.original, failures.InjectedFault)
+    assert telemetry.fallback_count() == 0  # no ladder in raise mode
+    # and nothing was quarantined
+    q = quarantine.Quarantine.load(quarantine.quarantine_path(pol))
+    assert q.entries == {}
+
+
+def test_numeric_guard_raise_mode(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path, on_failure="raise", numeric_guard=True)
+    faultinject.arm("numeric:chain", times=1)
+    with pytest.raises(failures.NumericalFailure, match="non-finite"):
+        chain.execute(spec, params, x, policy=pol)
+
+
+def test_numeric_guard_degrade_recovers(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path, numeric_guard=True)
+    oracle = _oracle_chain(spec, params, x, pol)
+    faultinject.arm("numeric:chain", times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y = chain.execute(spec, params, x, policy=pol)
+    got = np.asarray(y, np.float32)
+    assert np.isfinite(got).all()
+    rel = np.abs(got - oracle).max() / (np.abs(oracle).max() + 1e-30)
+    assert rel < 1e-5
+    rep = telemetry.runtime_report()
+    assert rep["numeric_trips"] == 1 and rep["fallbacks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# quarantine: pre-seeded bans honored with zero retries
+# ---------------------------------------------------------------------------
+
+def test_unfused_ban_executes_ref_with_zero_fallbacks(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path)
+    oracle = _oracle_chain(spec, params, x, pol)
+    _ban(pol, spec, x.shape, x.dtype, "unfused")
+    y = chain.execute(spec, params, x, policy=pol)
+    np.testing.assert_array_equal(np.asarray(y, np.float32), oracle)
+    rep = telemetry.runtime_report()
+    assert rep["fallbacks"] == 0 and rep["quarantine_hits"] > 0
+
+
+def test_supplied_banned_plan_ignored_with_warning(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path)
+    cp_fused = chain.plan(spec, x.shape,
+                          policy=dataclasses.replace(pol,
+                                                     on_failure="raise"))
+    assert ladder.plan_rung(cp_fused) == "fused3"
+    oracle = _oracle_chain(spec, params, x, pol)
+    _ban(pol, spec, x.shape, x.dtype, "fused3")
+    with pytest.warns(RuntimeWarning, match="ignoring supplied chain_plan"):
+        y = chain.execute(spec, params, x, policy=pol, chain_plan=cp_fused)
+    rel = np.abs(np.asarray(y, np.float32) - oracle).max() / \
+        (np.abs(oracle).max() + 1e-30)
+    assert rel < 1e-5
+    assert telemetry.fallback_count() == 0
+
+
+def test_quarantine_survives_into_fresh_process(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = _pol(tmp_path)
+    faultinject.arm("lowering:separable_fused", times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        chain.execute(spec, params, x, policy=pol)
+    assert telemetry.fallback_count() == 1
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = f"""
+import sys
+sys.path.insert(0, {os.path.join(root, "src")!r})
+import jax, jax.numpy as jnp
+from repro.core import chain
+from repro.kernels.policy import KernelPolicy
+from repro.runtime import telemetry
+spec = chain.inverted_residual_spec(c_in=8, c_out=8, expand=2)
+params = chain.init_chain(jax.random.PRNGKey(0), spec, 8)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+pol = KernelPolicy(impl="xla", tune_cache={pol.tune_cache!r})
+y = chain.execute(spec, params, x, policy=pol)
+rep = telemetry.runtime_report()
+assert rep["fallbacks"] == 0, rep       # zero retries in the new process
+assert rep["quarantine_hits"] > 0, rep  # ...because the ban was honored
+cp = chain.plan(spec, x.shape, policy=pol)
+assert all(s.kind != "fused3" for s in cp.segments), cp
+print("CHILD_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    assert "CHILD_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# network engine integration
+# ---------------------------------------------------------------------------
+
+def test_network_steady_state_after_transient_fault(tmp_path):
+    net = _tiny_net()
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    pol = _pol(tmp_path)
+    faultinject.arm("lowering:separable_fused", times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y1 = network.execute_network(net, params, x, policy=pol)
+    assert telemetry.fallback_count() == 1
+    faultinject.disarm_all()
+    telemetry.reset_runtime_telemetry()
+    # the failed jit was NOT memoized: this call re-plans, re-jits clean
+    y2 = network.execute_network(net, params, x, policy=pol)
+    assert telemetry.fallback_count() == 0
+    np.testing.assert_array_equal(np.asarray(y1, np.float32),
+                                  np.asarray(y2, np.float32))
+    # and now it IS memoized: a third call records nothing
+    network.execute_network(net, params, x, policy=pol)
+    assert telemetry.fallback_count() == 0
+
+
+def test_network_unfused_ban_forces_xla_block(tmp_path):
+    net = _tiny_net()
+    params = network.init_network(jax.random.PRNGKey(0), net)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 8))
+    pol = _pol(tmp_path)
+    with faultinject.suppressed():
+        oracle = x
+        for spec, p in zip(net.blocks, params):
+            oracle = chain.execute(
+                spec, p, oracle,
+                policy=dataclasses.replace(pol, on_failure="raise"))
+        oracle = np.asarray(oracle, np.float32)
+    policies = network.resolve_block_policies(net, pol, None)
+    problems, _ = network._block_problems(net, x.shape, x.dtype, policies)
+    (shape1, dt1) = problems[1]
+    _ban(policies[1], net.blocks[1], shape1, jnp.dtype(dt1),
+         "fused3", "unfused")
+    y = network.execute_network(net, params, x, policy=pol)
+    rel = np.abs(np.asarray(y, np.float32) - oracle).max() / \
+        (np.abs(oracle).max() + 1e-30)
+    assert rel < 1e-5
+    assert telemetry.fallback_count() == 0
+
+
+def test_pallas_interpret_chain_fault_parity(tmp_path):
+    spec = _ir_spec()
+    params, x = _chain_data(spec)
+    pol = KernelPolicy(impl="pallas", interpret=True,
+                       tune_cache=str(tmp_path / "tune.json"))
+    oracle = _oracle_chain(spec, params, x, pol)
+    faultinject.arm("lowering:separable_fused", times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y = chain.execute(spec, params, x, policy=pol)
+    rel = np.abs(np.asarray(y, np.float32) - oracle).max() / \
+        (np.abs(oracle).max() + 1e-30)
+    assert rel < 1e-5
+    assert telemetry.fallback_count() == 1
