@@ -9,6 +9,11 @@ One row per (arch x body-input resolution):
   block lowers to ONE fused kernel pass.
 * ``ir_fused3`` — every 3-stage block (the t=6 inverted residuals) planned
   to the 3-stage fused kernel, under BOTH the fp32 and bf16 policies.
+* ``se_fused`` / ``mb_fused`` — every SE-carrying block planned to the
+  fused ``dw_se`` segment (no standalone two-GEMM ``se`` pass) and every
+  FusedMB-led block planned to the single-pass ``fusedmb`` segment, under
+  both policies; vacuously True for archs without those stages
+  (DESIGN.md §10).
 * ``MB_unfused`` / ``MB_fp32`` / ``MB_bf16`` — modeled HBM bytes of the
   per-block unfused composition (fp32), the fused fp32 network, and the
   bf16-streamed network (``core.intensity.network_traffic`` — bytes at each
@@ -35,14 +40,25 @@ from repro.kernels.policy import DtypePolicy, KernelPolicy
 RESOLUTIONS = (56, 112, 224)
 
 
+def benchmarked_networks():
+    """(name, NetworkSpec) per benchmarked arch — the single source the
+    trajectory baseline, the analysis sweep and this table share."""
+    return (("mobilenet_v1", network.mobilenet_v1_spec()),
+            ("mobilenet_v2", network.mobilenet_v2_spec()),
+            ("mnasnet_a1", network.mnasnet_a1_spec()),
+            ("efficientnet_lite0", network.efficientnet_lite0_spec()))
+
+
+def _has_stage(spec, attr: str) -> bool:
+    return any(hasattr(s, attr) for s in spec.stages)
+
+
 def network_rows(resolutions=RESOLUTIONS) -> list:
     rows = []
-    nets = (("mobilenet_v1", network.mobilenet_v1_spec()),
-            ("mobilenet_v2", network.mobilenet_v2_spec()))
     p32 = KernelPolicy()
     pbf = KernelPolicy(dtype_policy=DtypePolicy(stream="bfloat16"))
     punf = KernelPolicy(fused=False)
-    for name, net in nets:
+    for name, net in benchmarked_networks():
         for res in resolutions:
             shape = (1, res, res, net.c_in)
             n32 = network.plan_network(net, shape, policy=p32)
@@ -51,12 +67,27 @@ def network_rows(resolutions=RESOLUTIONS) -> list:
             t32 = it.network_traffic(net, n32)
             tbf = it.network_traffic(net, nbf)
             tunf = it.network_traffic(net, nunf)
-            # every 3-stage block must plan fused3 under both dtype policies
+            # every 3-stage all-separable block must plan fused3 under both
+            # dtype policies
             ir_fused3 = all(
                 p.segments[0].kind == "fused3"
                 for nplan in (n32, nbf)
                 for spec, p in zip(net.blocks, nplan.plans)
-                if len(spec.stages) == 3)
+                if len(spec.stages) == 3
+                and not _has_stage(spec, "reduce"))
+            # SE blocks fuse the gate onto the DW pass; FusedMB blocks plan
+            # the single conv+project pass (vacuously True without them)
+            se_fused = all(
+                any(s.kind == "dw_se" for s in p.segments)
+                for nplan in (n32, nbf)
+                for spec, p in zip(net.blocks, nplan.plans)
+                if _has_stage(spec, "reduce"))
+            mb_fused = all(
+                p.segments[0].kind == "fusedmb"
+                for nplan in (n32, nbf)
+                for spec, p in zip(net.blocks, nplan.plans)
+                if any(hasattr(s, "features") and hasattr(s, "stride")
+                       for s in spec.stages))
             rows.append({
                 "name": f"{name}/res{res}",
                 "blocks": net.n_blocks,
@@ -66,6 +97,8 @@ def network_rows(resolutions=RESOLUTIONS) -> list:
                     sorted(n32.segment_histogram().items())),
                 "single_pass": bool(n32.fully_fused and nbf.fully_fused),
                 "ir_fused3": bool(ir_fused3),
+                "se_fused": bool(se_fused),
+                "mb_fused": bool(mb_fused),
                 "mb_unfused": tunf.bytes_hbm / 1e6,
                 "mb_fp32": t32.bytes_hbm / 1e6,
                 "mb_bf16": tbf.bytes_hbm / 1e6,
@@ -85,6 +118,7 @@ def csv_network_rows(rows=None) -> list:
             f"blocks={r['blocks']};passes={r['passes']};"
             f"histo={r['histo']};single_pass={r['single_pass']};"
             f"ir_fused3={r['ir_fused3']};"
+            f"se_fused={r['se_fused']};mb_fused={r['mb_fused']};"
             f"MB_unfused={r['mb_unfused']:.2f};"
             f"MB_fp32={r['mb_fp32']:.2f};MB_bf16={r['mb_bf16']:.2f};"
             f"GFLOP={r['gflops']:.3f};traffic_ok={r['traffic_ok']}")

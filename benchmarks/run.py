@@ -39,6 +39,11 @@ Flags:
   ``--full`` at the paper's 112x112.
 * ``--runtime-report PATH`` — write the three phase telemetry snapshots as
   JSON (requires ``--fault-inject``).
+* ``--baseline`` — (re)write the committed benchmark-trajectory baseline
+  (``BENCH_baseline.json``: geometry-keyed traffic + per-block plan rows,
+  sorted keys) and exit. ``--check-baseline`` re-collects and diffs
+  against the committed baseline, exiting 1 on any traffic regression or
+  plan downgrade — the CI ``bench-gate`` job (benchmarks/trajectory.py).
 """
 from __future__ import annotations
 
@@ -68,7 +73,26 @@ def main() -> None:
                          "for the runtime-hardening matrix (DESIGN.md §9)")
     ap.add_argument("--runtime-report", default=None, metavar="PATH",
                     help="write the fault-injection telemetry report here")
+    ap.add_argument("--baseline", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write the trajectory baseline JSON (default: "
+                         "BENCH_baseline.json at the repo root) and exit")
+    ap.add_argument("--check-baseline", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="diff the trajectory against the committed "
+                         "baseline and exit 1 on regression (bench-gate)")
     args = ap.parse_args()
+
+    if args.baseline is not None:
+        from benchmarks import trajectory
+        path = trajectory.write_baseline(
+            args.baseline or trajectory.DEFAULT_BASELINE)
+        print(f"trajectory baseline written to {os.path.normpath(path)}")
+        return
+    if args.check_baseline is not None:
+        from benchmarks import trajectory
+        sys.exit(trajectory.check_baseline(
+            args.check_baseline or trajectory.DEFAULT_BASELINE))
 
     from benchmarks.paper_figs import run_all
     from benchmarks.roofline_table import csv_rows, load_records

@@ -36,8 +36,11 @@ BF16_REL_TOL = 5e-2
 
 #: The lowering points; when ALL are armed persistently every block is
 #: forced down to the reference rung, making fp32 outputs bitwise-equal to
-#: the per-block oracle.
-_LOWERING_POINTS = ("lowering:separable_fused", "lowering:pwconv",
+#: the per-block oracle.  Includes the DESIGN §10 stage-algebra points so
+#: the MnasNet-A1 (dw_se/se) and EfficientNet-Lite0 (fusedmb/mb) blocks
+#: fault and quarantine like the separable ones.
+_LOWERING_POINTS = ("lowering:separable_fused", "lowering:fused_mbconv",
+                    "lowering:se_epilogue", "lowering:pwconv",
                     "lowering:dwconv2d")
 
 
@@ -48,7 +51,9 @@ def _configs():
         (arch, dname, net, DtypePolicy(stream="bfloat16")
          if dname == "bf16" else DtypePolicy())
         for arch, net in (("v1", network.mobilenet_v1_spec()),
-                          ("v2", network.mobilenet_v2_spec()))
+                          ("v2", network.mobilenet_v2_spec()),
+                          ("mnasnet_a1", network.mnasnet_a1_spec()),
+                          ("enlite0", network.efficientnet_lite0_spec()))
         for dname in ("fp32", "bf16")
     ]
 

@@ -1,0 +1,188 @@
+"""Benchmark-trajectory gate (DESIGN.md §10): the committed baseline the
+CI ``bench-gate`` job diffs every PR against.
+
+The repo's perf story is ANALYTIC — traffic models and plan shapes, not
+wall clocks — so it can be gated exactly: a PR that silently regresses
+modeled HBM traffic, adds kernel passes, or downgrades a plan (fused3 ->
+fused2, fusedmb -> mb+pw, dw_se -> dw+se) fails CI against
+``BENCH_baseline.json`` at the repo root, deterministically, on any host.
+
+Baseline schema (``collect``): one record per (arch x resolution) from
+``benchmarks/network_table.benchmarked_networks``:
+
+* ``traffic`` — modeled HBM MB for the unfused / fused-fp32 / bf16-stream
+  plans and the fp32 GFLOPs (``core/intensity`` models; byte-exact).
+* ``blocks``  — per-block plan rows: the ``+``-joined segment kinds, the
+  kernel-pass count and the segment count under the default fp32 policy.
+
+Comparison (``compare``):
+
+* traffic regression — any byte metric strictly above baseline fails
+  (a small relative tolerance absorbs float formatting, nothing else);
+  improvements pass with a note, prompting a ``--baseline`` refresh.
+* plan downgrade — per block, ``(n_passes, n_segments)`` lexicographically
+  above baseline fails: every degradation (fused3 -> pw+fused2, dw_se ->
+  dw+se, fusedmb -> mb+pw) grows passes or splits segments.  A changed
+  plan that is no worse (more fusion) passes with a note.
+* coverage loss — a baseline row or block missing from the current run
+  fails; NEW rows (a new arch/resolution) pass with a note.
+
+``python benchmarks/run.py --baseline`` rewrites the baseline;
+``--check-baseline`` runs this gate (exit 1 on failure).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+#: Committed at the repo root — the PR-visible perf contract.
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_baseline.json")
+
+#: Relative slack on byte metrics: absorbs float round-tripping through
+#: JSON, NOT model changes (the models are integer-exact in bytes).
+TRAFFIC_RTOL = 1e-9
+
+SCHEMA_VERSION = 1
+
+
+def collect(resolutions=None) -> dict:
+    """The canonical trajectory record — pure shape arithmetic (plans and
+    traffic models), no compilation, deterministic on any host."""
+    from repro.core import network
+    from repro.kernels.policy import KernelPolicy
+
+    from benchmarks import network_table
+
+    res = resolutions if resolutions is not None \
+        else network_table.RESOLUTIONS
+    pol = KernelPolicy()
+    records = {}
+    for row in network_table.network_rows(res):
+        records[row["name"]] = {
+            "traffic": {
+                "mb_unfused": round(row["mb_unfused"], 6),
+                "mb_fp32": round(row["mb_fp32"], 6),
+                "mb_bf16": round(row["mb_bf16"], 6),
+                "gflops": round(row["gflops"], 6),
+            },
+            "flags": {
+                "single_pass": row["single_pass"],
+                "ir_fused3": row["ir_fused3"],
+                "se_fused": row["se_fused"],
+                "mb_fused": row["mb_fused"],
+                "traffic_ok": row["traffic_ok"],
+            },
+        }
+    for name, net in network_table.benchmarked_networks():
+        for r in res:
+            nplan = network.plan_network(net, (1, r, r, net.c_in),
+                                         policy=pol)
+            records[f"{name}/res{r}"]["blocks"] = [
+                {
+                    "kinds": "+".join(s.kind for s in p.segments),
+                    "passes": p.n_kernel_passes,
+                    "segments": len(p.segments),
+                }
+                for p in nplan.plans
+            ]
+    return {"schema": SCHEMA_VERSION, "networks": records}
+
+
+def write_baseline(path: str = DEFAULT_BASELINE,
+                   baseline: dict = None) -> str:
+    data = baseline if baseline is not None else collect()
+    with open(path, "w") as f:
+        # sorted keys + trailing newline: byte-stable, clean diffs
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
+    """(failures, notes): empty failures == the gate passes."""
+    failures, notes = [], []
+    base_nets = baseline.get("networks", {})
+    cur_nets = current.get("networks", {})
+    for name in sorted(set(cur_nets) - set(base_nets)):
+        notes.append(f"{name}: new row (not in baseline) — refresh with "
+                     "--baseline to start gating it")
+    for name, base in sorted(base_nets.items()):
+        cur = cur_nets.get(name)
+        if cur is None:
+            failures.append(f"{name}: row missing from the current run — "
+                            "benchmark coverage regressed")
+            continue
+        bt, ct = base.get("traffic", {}), cur.get("traffic", {})
+        for metric in ("mb_unfused", "mb_fp32", "mb_bf16"):
+            b, c = bt.get(metric), ct.get(metric)
+            if b is None or c is None:
+                continue
+            if c > b * (1 + TRAFFIC_RTOL):
+                failures.append(
+                    f"{name}: {metric} regressed {b:.3f} -> {c:.3f} MB")
+            elif c < b * (1 - TRAFFIC_RTOL):
+                notes.append(
+                    f"{name}: {metric} improved {b:.3f} -> {c:.3f} MB — "
+                    "refresh the baseline to lock it in")
+        bf, cf = base.get("flags", {}), cur.get("flags", {})
+        for flag, bv in sorted(bf.items()):
+            cv = cf.get(flag)
+            if bv is True and cv is not True:
+                failures.append(f"{name}: flag {flag} dropped "
+                                f"{bv} -> {cv}")
+            elif bv is False and cv is True:
+                notes.append(f"{name}: flag {flag} improved to True — "
+                             "refresh the baseline")
+        bb, cb = base.get("blocks", []), cur.get("blocks", [])
+        if len(bb) != len(cb):
+            failures.append(f"{name}: block count changed "
+                            f"{len(bb)} -> {len(cb)}")
+            continue
+        for i, (old, new) in enumerate(zip(bb, cb)):
+            ok = (old["passes"], old["segments"])
+            nk = (new["passes"], new["segments"])
+            if nk > ok:
+                failures.append(
+                    f"{name}/block{i}: plan downgraded "
+                    f"{old['kinds']} -> {new['kinds']} "
+                    f"(passes {old['passes']}->{new['passes']}, "
+                    f"segments {old['segments']}->{new['segments']})")
+            elif new["kinds"] != old["kinds"]:
+                notes.append(
+                    f"{name}/block{i}: plan changed (no worse) "
+                    f"{old['kinds']} -> {new['kinds']} — refresh the "
+                    "baseline to lock it in")
+    return failures, notes
+
+
+def check_baseline(path: str = DEFAULT_BASELINE, current: dict = None,
+                   ) -> int:
+    """Run the gate against the committed baseline; prints the verdict and
+    returns a process exit code (0 pass, 1 fail/missing)."""
+    if not os.path.exists(path):
+        print(f"bench-gate: baseline {path} not found — generate it with "
+              "`python benchmarks/run.py --baseline` and commit it")
+        return 1
+    with open(path) as f:
+        baseline = json.load(f)
+    cur = current if current is not None else collect()
+    failures, notes = compare(baseline, cur)
+    for n in notes:
+        print(f"bench-gate NOTE  {n}")
+    for x in failures:
+        print(f"bench-gate FAIL  {x}")
+    if failures:
+        print(f"bench-gate: {len(failures)} regression(s) vs {path}")
+        return 1
+    print(f"bench-gate: ok ({len(baseline.get('networks', {}))} rows vs "
+          f"{path}, {len(notes)} note(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check_baseline())

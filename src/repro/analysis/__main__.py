@@ -3,7 +3,9 @@
 Plans and statically verifies every benchmarked geometry
 (``benchmarks/layers.py``: the separable-block suites incl. the
 high-resolution slabbed blocks, and the whole inverted residuals) plus the
-full MobileNetV1/V2 network plans under BOTH dtype policies (native fp32
+full MobileNetV1/V2, MnasNet-A1 and EfficientNet-Lite0 network plans (the
+latter two exercising the SE and fused-MBConv stage kinds, DESIGN.md §10)
+under BOTH dtype policies (native fp32
 and bf16 streaming), then prints the diagnostics summary and exits 1 on
 any error-severity finding.  ``--json PATH`` writes the structured report
 (sorted keys, trailing newline — stable diffs) for the CI artifact.
@@ -117,7 +119,9 @@ def sweep(batch: int = 1, res: int = 112, jaxpr: bool = True,
 
     for pname, pol in policies.items():
         for net in (network.mobilenet_v1_spec(),
-                    network.mobilenet_v2_spec()):
+                    network.mobilenet_v2_spec(),
+                    network.mnasnet_a1_spec(),
+                    network.efficientnet_lite0_spec()):
             label = f"network/{net.name}/res{res}/{pname}"
             x_shape = (batch, res, res, net.c_in)
             bpols = network.resolve_block_policies(net, pol)

@@ -57,7 +57,17 @@ def param_structs(spec, c_in: int, dtype) -> list:
     params = []
     c = c_in
     for s in spec.stages:
-        if hasattr(s, "features"):          # PW
+        if hasattr(s, "reduce"):            # SE
+            p = {"w1": jax.ShapeDtypeStruct((c, s.reduce), d),
+                 "b1": jax.ShapeDtypeStruct((s.reduce,), d),
+                 "w2": jax.ShapeDtypeStruct((s.reduce, c), d),
+                 "b2": jax.ShapeDtypeStruct((c,), d)}
+        elif hasattr(s, "features") and hasattr(s, "stride"):  # FusedMB
+            p = {"f": jax.ShapeDtypeStruct((s.hf, s.wf, c, s.features), d)}
+            if s.bias:
+                p["b"] = jax.ShapeDtypeStruct((s.features,), d)
+            c = s.features
+        elif hasattr(s, "features"):        # PW
             p = {"w": jax.ShapeDtypeStruct((c, s.features), d)}
             if s.bias:
                 p["b"] = jax.ShapeDtypeStruct((s.features,), d)
@@ -197,6 +207,10 @@ def lint_chain_jaxpr(spec, chain_plan: ChainPlan, x_shape: Sequence[int],
     diags = audit_casts(jaxpr, allowed, label)
     diags.extend(audit_accumulation(jaxpr, label))
     if policy.resolved() == "pallas":
-        diags.extend(audit_passes(jaxpr, len(chain_plan.segments),
+        # se lowers to TWO pwconv passes (reduce + expand GEMMs); mb lowers
+        # to the XLA convolution on every impl (ZERO Pallas passes)
+        n_expected = sum({"se": 2, "mb": 0}.get(s.kind, 1)
+                         for s in chain_plan.segments)
+        diags.extend(audit_passes(jaxpr, n_expected,
                                   chain_plan.fully_fused, label))
     return diags

@@ -37,9 +37,18 @@ from repro.kernels import blocking
 from repro.kernels.autotune import _SegGeom, _segment_geoms
 from repro.kernels.blocking import BlockPlan, ChainPlan
 from repro.kernels.dwconv2d import dw_kernel_model
+from repro.kernels.fused_mbconv import fused_mb_kernel_model
 from repro.kernels.gridspec import VMEM_HARD_BYTES, KernelModel
 from repro.kernels.pwconv import pw_clamp_blocks, pw_kernel_model
+from repro.kernels.se_epilogue import dw_se_kernel_model
 from repro.kernels.separable_fused import fused_kernel_model
+
+#: Segment kinds with no Pallas kernel of their own: ``se`` lowers to two
+#: pwconv passes (linted as GEMMs at their own geometry would be, but
+#: composed by the lowering) + XLA pool/scale; ``mb`` lowers to the XLA
+#: convolution on every impl.  ``segment_kernel_model`` returns None for
+#: these BY DESIGN — not plan corruption.
+XLA_COMPOSED_KINDS = ("se", "mb")
 
 #: Grid-cell ceiling for exhaustive enumeration; larger grids are checked at
 #: per-dimension boundary samples (first/last/middle) and coverage checks
@@ -63,13 +72,33 @@ def _geom_str(geom: _SegGeom) -> str:
 
 
 def segment_kernel_model(geom: _SegGeom, plan: BlockPlan,
-                         b: int) -> KernelModel:
+                         b: int) -> Optional[KernelModel]:
     """The KernelModel this segment's kernel will lower to — built by the
     SAME ``*_kernel_model`` function the kernel itself consumes.  The
     output itemsize is taken at the stream width (``plan.dtype_bytes``);
     a wider final store only grows the output buffer, which PL103's hard
-    ceiling still bounds via the fp32 accumulator/value terms."""
+    ceiling still bounds via the fp32 accumulator/value terms.  Returns
+    None for :data:`XLA_COMPOSED_KINDS` (no single Pallas kernel)."""
     nb = plan.dtype_bytes
+    if geom.kind in XLA_COMPOSED_KINDS:
+        return None
+    if geom.kind == "fusedmb":
+        return fused_mb_kernel_model(
+            b=b, ho=geom.ho, wo=geom.wo, c_in=geom.ci, c=geom.c,
+            co=geom.co, hf=geom.hf, wf=geom.wf, stride=geom.stride,
+            block_c=plan.block_c, block_co=plan.block_co,
+            slab_h=plan.slab_h, itemsize=nb, out_itemsize=nb,
+            has_mb_bias=True, has_pw_bias=True,
+            has_residual=geom.residual,
+        )
+    if geom.kind == "dw_se":
+        hiu = (geom.ho - 1) * geom.stride + geom.hf
+        wiu = (geom.wo - 1) * geom.stride + geom.wf
+        return dw_se_kernel_model(
+            b=b, hiu=hiu, wiu=wiu, ho=geom.ho, wo=geom.wo, c=geom.c,
+            c_se=geom.g, hf=geom.hf, wf=geom.wf,
+            itemsize=nb, out_itemsize=nb, has_dw_bias=True,
+        )
     if geom.kind in ("fused3", "fused2"):
         return fused_kernel_model(
             b=b, ho=geom.ho, wo=geom.wo, c_in=geom.ci, c=geom.c, co=geom.co,
@@ -100,7 +129,9 @@ def segment_kernel_model(geom: _SegGeom, plan: BlockPlan,
 # PL101-PL113: plan-field checks
 # ---------------------------------------------------------------------------
 
-def _claimed_vmem(geom: _SegGeom, plan: BlockPlan) -> int:
+def _claimed_vmem(geom: _SegGeom, plan: BlockPlan,
+                  b: Optional[int] = None, budget: Optional[int] = None,
+                  ) -> int:
     """The planner's own model recomputed at the plan's block fields."""
     nb = plan.dtype_bytes
     if geom.kind == "fused3":
@@ -111,6 +142,30 @@ def _claimed_vmem(geom: _SegGeom, plan: BlockPlan) -> int:
         return blocking.fused_vmem_bytes(
             geom.wo, plan.slab_h, plan.block_c, plan.block_co,
             geom.hf, geom.wf, geom.stride, nb, geom.residual)
+    if geom.kind == "fusedmb":
+        return blocking.fused_mb_vmem_bytes(
+            geom.wo, plan.slab_h, geom.ci, plan.block_c, plan.block_co,
+            geom.hf, geom.wf, geom.stride, nb, geom.residual)
+    if geom.kind == "dw_se":
+        hiu = (geom.ho - 1) * geom.stride + geom.hf
+        wiu = (geom.wo - 1) * geom.stride + geom.wf
+        return blocking.dw_se_vmem_bytes(
+            hiu, wiu, geom.ho, geom.wo, geom.c, geom.g,
+            geom.hf, geom.wf, nb)
+    if geom.kind == "mb":
+        # lowers to the XLA convolution on every impl: no Pallas working
+        # set to claim (plan_mb)
+        return 0
+    if geom.kind == "se":
+        # the claim is the larger inner pwconv plan's working set; the
+        # GEMM's G dimension is the BATCH, which the shape walk does not
+        # carry — recompute only when the caller supplies it
+        if b is None:
+            return plan.vmem_bytes
+        dtype = "bfloat16" if nb == 2 else "float32"
+        kw = {} if budget is None else {"vmem_budget": budget}
+        return blocking.plan_se(b, geom.c, geom.g, dtype=dtype,
+                                **kw).vmem_bytes
     if geom.kind == "dw":
         hiu = (geom.ho - 1) * geom.stride + geom.hf
         wiu = (geom.wo - 1) * geom.stride + geom.wf
@@ -121,8 +176,11 @@ def _claimed_vmem(geom: _SegGeom, plan: BlockPlan) -> int:
 
 
 def lint_segment_fields(geom: _SegGeom, plan: BlockPlan, budget: int,
-                        segment: str) -> List[Diagnostic]:
-    """PL101/PL102 (VMEM claim), PL110-PL113 (block-field validity)."""
+                        segment: str,
+                        b: Optional[int] = None) -> List[Diagnostic]:
+    """PL101/PL102 (VMEM claim), PL110-PL114 (block-field validity).
+    ``b`` (the batch) tightens the PL102 recompute for ``se`` segments,
+    whose GEMM rows are the batch dimension."""
     diags: List[Diagnostic] = []
     geo = _geom_str(geom)
 
@@ -151,6 +209,34 @@ def lint_segment_fields(geom: _SegGeom, plan: BlockPlan, budget: int,
                 err("PL113", f"Co block {bco} splits co={geom.co} off the "
                     f"{blocking.LANES}-lane tile",
                     "use a multiple of 128 for block_co")
+    elif geom.kind in XLA_COMPOSED_KINDS:
+        # se / mb compose XLA (+pwconv) passes — no kernel blocks to
+        # validate, but degenerate slab fields must still hold.
+        if plan.n_slabs != 1 or plan.halo_rows != 0:
+            err("PL112", f"{geom.kind} segment carries slab fields "
+                f"(n_slabs={plan.n_slabs}, halo_rows={plan.halo_rows})",
+                "XLA-composed segments have no spatial slab dimension")
+    elif geom.kind == "dw_se":
+        # PL114: the SE gate mixes ALL channels of a pool over ALL spatial
+        # positions — partial residency is a WRONG answer, not a slower
+        # one (kernels/se_epilogue.py residency contract).
+        if plan.block_c != geom.c:
+            err("PL114", f"block_c={plan.block_c} != C={geom.c} on a dw_se "
+                "segment — the SE gate would be computed from a partial "
+                "channel set",
+                "dw_se requires full-channel residency; degrade to "
+                "standalone dw + se instead of shrinking block_c")
+        if plan.n_slabs != 1 or plan.halo_rows != 0 or plan.slab_h != geom.ho:
+            err("PL114", f"spatial slabbing (slab_h={plan.slab_h}, "
+                f"n_slabs={plan.n_slabs}, halo_rows={plan.halo_rows}) on a "
+                "dw_se segment — the pooled mean would span one slab, not "
+                "the image",
+                "dw_se requires full-spatial residency (slab_h=ho, "
+                "n_slabs=1); degrade to standalone dw + se")
+        if plan.block_g != geom.g:
+            err("PL114", f"block_g={plan.block_g} does not carry the SE "
+                f"reduced width c_se={geom.g}",
+                "dw_se plans store c_se in block_g (blocking.plan_dw_se)")
     else:
         # PL110: channel block must be a value snap_channels can produce.
         cb = plan.block_c
@@ -159,7 +245,7 @@ def lint_segment_fields(geom: _SegGeom, plan: BlockPlan, budget: int,
                 f"(want {blocking.snap_channels(max(cb, 1), geom.c)})",
                 "channel blocks must be all-of-C, a multiple of 128, or a "
                 "power of two (blocking.snap_channels)")
-        if geom.kind in ("fused2", "fused3"):
+        if geom.kind in ("fused2", "fused3", "fusedmb"):
             # PL111: Co panel must come from the co_candidates ladder.
             if plan.block_co not in blocking.co_candidates(geom.co):
                 err("PL111", f"block_co={plan.block_co} is not a valid Co "
@@ -188,7 +274,7 @@ def lint_segment_fields(geom: _SegGeom, plan: BlockPlan, budget: int,
     if not diags:
         # PL102 only when the fields themselves are coherent — recomputing
         # the model at corrupted fields would double-report.
-        claimed = _claimed_vmem(geom, plan)
+        claimed = _claimed_vmem(geom, plan, b, budget)
         if plan.vmem_bytes != claimed:
             diags.append(Diagnostic(
                 "PL102", ERROR,
@@ -362,7 +448,8 @@ def check_grid(model: KernelModel, *, segment: str = "",
 def chain_models(spec, chain_plan: ChainPlan, x_shape: Sequence[int],
                  ) -> List[Tuple[str, _SegGeom, Optional[KernelModel]]]:
     """(segment label, geometry, derived KernelModel) per segment; the model
-    is None when the plan's fields are too corrupted to derive one."""
+    is None when the plan's fields are too corrupted to derive one — or,
+    for :data:`XLA_COMPOSED_KINDS` (se, mb), by design."""
     b = int(x_shape[0])
     out = []
     for si, (geom, seg) in enumerate(zip(
@@ -381,18 +468,21 @@ def lint_chain(spec, chain_plan: ChainPlan, x_shape: Sequence[int], *,
     """The full planlint pass: field checks, derived VMEM, grid proofs."""
     diags: List[Diagnostic] = []
     budget = chain_plan.vmem_budget
+    b = int(x_shape[0])
     for (seg_label, geom, model), seg in zip(
             chain_models(spec, chain_plan, x_shape), chain_plan.segments):
         segment = f"{label}/{seg_label}"
-        field_diags = lint_segment_fields(geom, seg.plan, budget, segment)
+        field_diags = lint_segment_fields(geom, seg.plan, budget, segment,
+                                          b=b)
         diags.extend(field_diags)
         if any(d.severity == ERROR for d in field_diags):
             continue  # grid checks on corrupted fields would only cascade
         if model is None:
-            diags.append(Diagnostic(
-                "PL112", ERROR,
-                "cannot derive the kernel geometry from this plan",
-                segment, _geom_str(geom)))
+            if geom.kind not in XLA_COMPOSED_KINDS:
+                diags.append(Diagnostic(
+                    "PL112", ERROR,
+                    "cannot derive the kernel geometry from this plan",
+                    segment, _geom_str(geom)))
             continue
         diags.extend(check_vmem_derived(model, budget, segment,
                                         _geom_str(geom)))

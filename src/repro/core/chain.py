@@ -81,7 +81,61 @@ class DW:
                 (w - self.wf) // self.stride + 1)
 
 
-Stage = Union[PW, DW]
+@dataclasses.dataclass(frozen=True)
+class SE:
+    """Squeeze-excite stage: global-avg-pool -> FC-reduce (``reduce``
+    hidden units, ``activation``) -> FC-expand back to the incoming width
+    -> sigmoid -> channelwise scale of the stage input.
+
+    ``reduce`` is the explicit reduced width (builders compute it, e.g.
+    ``max(1, c_block_input // 4)`` for MnasNet's se_ratio=0.25 counted on
+    the *block* input, not the expanded width).  SE stages are always
+    biased — both FCs carry a bias vector, per the reference networks.
+
+    Note the sigmoid gate does NOT map 0 -> 0, so SE can never join the
+    shared fused-kernel epilogue set (``kernels/epilogue.ACTIVATIONS`` is
+    the zero-padding-commuting family); it gets its own lowering paths:
+    fused as the ``dw_se`` segment epilogue (padded channels carry zero DW
+    output, and 0 * sigmoid(gate) == 0 regardless of the gate), or the
+    standalone two-GEMM ``se`` segment.
+    """
+    reduce: int
+    activation: str = "relu"
+
+    def __post_init__(self):
+        assert self.reduce >= 1, self.reduce
+        assert self.activation in ACTIVATIONS
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedMB:
+    """Fused-MBConv stage: a full ``hf x wf`` dense conv straight to
+    ``features`` output channels — the EfficientNet-Lite edge block that
+    replaces PW-expand + DW with one MXU-shaped convolution.  When followed
+    by a PW projection the planner fuses the pair into ONE kernel pass
+    (segment kind ``fusedmb``): conv-on-the-fly per row slab, projection
+    GEMM accumulating in VMEM, the expanded tensor never touching HBM.
+    """
+    features: int
+    stride: int = 1
+    hf: int = 3
+    wf: int = 3
+    activation: Optional[str] = "relu6"
+    padding: str = "same"
+    bias: bool = False
+
+    def __post_init__(self):
+        assert self.activation is None or self.activation in ACTIVATIONS
+        assert self.padding.lower() in ("same", "valid"), self.padding
+
+    def out_dims(self, h: int, w: int) -> Tuple[int, int]:
+        if self.padding.lower() == "same":
+            return -(-h // self.stride), -(-w // self.stride)
+        return ((h - self.hf) // self.stride + 1,
+                (w - self.wf) // self.stride + 1)
+
+
+Stage = Union[PW, DW, SE, FusedMB]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,19 +152,20 @@ class SeparableSpec:
     def __post_init__(self):
         assert self.stages, "empty chain"
         assert self.residual in (True, False, "auto"), self.residual
-        assert all(isinstance(s, (PW, DW)) for s in self.stages)
+        assert all(isinstance(s, (PW, DW, SE, FusedMB))
+                   for s in self.stages)
 
     def out_channels(self, c_in: int) -> int:
         c = c_in
         for s in self.stages:
-            if isinstance(s, PW):
+            if isinstance(s, (PW, FusedMB)):
                 c = s.features
         return c
 
     def stride_product(self) -> int:
         p = 1
         for s in self.stages:
-            if isinstance(s, DW):
+            if isinstance(s, (DW, FusedMB)):
                 p *= s.stride
         return p
 
@@ -142,6 +197,33 @@ def inverted_residual_spec(c_in: int, c_out: int, *, expand: int = 6,
     ), residual="auto")
 
 
+def mbconv_se_spec(c_in: int, c_out: int, *, expand: int = 6,
+                   stride: int = 1, hf: int = 3, se_ratio: float = 0.25,
+                   activation: str = "relu") -> SeparableSpec:
+    """MnasNet-A1 MBConv block with squeeze-excite: bias-free PW-expand ->
+    DW -> SE -> linear PW-project, residual when shapes allow.  The SE
+    reduced width is ``se_ratio`` of the *block input* width (the MnasNet /
+    EfficientNet convention — NOT of the expanded width)."""
+    return SeparableSpec(stages=(
+        PW(c_in * expand, activation=activation),
+        DW(stride=stride, activation=activation, hf=hf, wf=hf),
+        SE(max(1, int(c_in * se_ratio))),
+        PW(c_out),
+    ), residual="auto")
+
+
+def fused_mbconv_spec(c_in: int, c_out: int, *, expand: int = 6,
+                      stride: int = 1, hf: int = 3,
+                      activation: str = "relu6") -> SeparableSpec:
+    """EfficientNet-Lite fused-MBConv block: a full ``hf x wf`` conv to the
+    expanded width -> linear PW-project, residual when shapes allow."""
+    return SeparableSpec(stages=(
+        FusedMB(c_in * expand, stride=stride, hf=hf, wf=hf,
+                activation=activation),
+        PW(c_out),
+    ), residual="auto")
+
+
 def init_chain(key, spec: SeparableSpec, c_in: int,
                dtype=jnp.float32) -> list:
     """He-style init for a chain; one params dict per stage, aligned with
@@ -153,6 +235,21 @@ def init_chain(key, spec: SeparableSpec, c_in: int,
         if isinstance(s, PW):
             p = {"w": (jax.random.normal(k, (c, s.features), dtype)
                        / jnp.sqrt(c).astype(dtype))}
+            if s.bias:
+                p["b"] = jnp.zeros((s.features,), dtype)
+            c = s.features
+        elif isinstance(s, SE):
+            k1, k2 = jax.random.split(k)
+            p = {"w1": (jax.random.normal(k1, (c, s.reduce), dtype)
+                        / jnp.sqrt(c).astype(dtype)),
+                 "b1": jnp.zeros((s.reduce,), dtype),
+                 "w2": (jax.random.normal(k2, (s.reduce, c), dtype)
+                        / jnp.sqrt(s.reduce).astype(dtype)),
+                 "b2": jnp.zeros((c,), dtype)}
+        elif isinstance(s, FusedMB):
+            p = {"f": (jax.random.normal(k, (s.hf, s.wf, c, s.features),
+                                         dtype)
+                       / jnp.sqrt(s.hf * s.wf * c).astype(dtype))}
             if s.bias:
                 p["b"] = jnp.zeros((s.features,), dtype)
             c = s.features
@@ -182,6 +279,20 @@ def _fusable2(stages: Tuple[Stage, ...], i: int) -> bool:
     return (i + 1 < len(stages)
             and isinstance(stages[i], DW)
             and isinstance(stages[i + 1], PW))
+
+
+def _fusable_mb(stages: Tuple[Stage, ...], i: int) -> bool:
+    """stages[i:i+2] is a (FusedMB, PW) run — the fused-MBConv window."""
+    return (i + 1 < len(stages)
+            and isinstance(stages[i], FusedMB)
+            and isinstance(stages[i + 1], PW))
+
+
+def _fusable_dw_se(stages: Tuple[Stage, ...], i: int) -> bool:
+    """stages[i:i+2] is a (DW, SE) run — the SE-as-epilogue window."""
+    return (i + 1 < len(stages)
+            and isinstance(stages[i], DW)
+            and isinstance(stages[i + 1], SE))
 
 
 def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
@@ -235,7 +346,7 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
     # would miss).
     ho_f, wo_f = h, w
     for s in stages:
-        if isinstance(s, DW):
+        if isinstance(s, (DW, FusedMB)):
             ho_f, wo_f = s.out_dims(ho_f, wo_f)
     spatial_ok = (ho_f, wo_f) == (h, w)
     if spec.residual is True and not spatial_ok:
@@ -263,6 +374,19 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
                 h, w, c = ho, wo, proj.features
                 i += 3
                 continue
+        if allowed and "fusedmb" not in banned and _fusable_mb(stages, i):
+            mb, proj = stages[i], stages[i + 1]
+            ho, wo = mb.out_dims(h, w)
+            with_res = res_active and i + 2 == n
+            pmb = blocking.plan_fused_mb(
+                ho, wo, c, mb.features, proj.features, stride=mb.stride,
+                hf=mb.hf, wf=mb.wf, dtype=dtype, vmem_budget=budget,
+                residual=with_res)
+            if pmb is not None:
+                segments.append(ChainSegment("fusedmb", (i, i + 1), pmb))
+                h, w, c = ho, wo, proj.features
+                i += 2
+                continue
         if allowed and "fused2" not in banned and _fusable2(stages, i):
             d, proj = stages[i], stages[i + 1]
             ho, wo = d.out_dims(h, w)
@@ -276,11 +400,33 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
                 h, w, c = ho, wo, proj.features
                 i += 2
                 continue
+        if allowed and "dw_se" not in banned and _fusable_dw_se(stages, i):
+            d, se = stages[i], stages[i + 1]
+            ho, wo = d.out_dims(h, w)
+            hi_v = (ho - 1) * d.stride + d.hf
+            wi_v = (wo - 1) * d.stride + d.wf
+            pse = blocking.plan_dw_se(
+                hi_v, wi_v, ho, wo, c, se.reduce, d.hf, d.wf,
+                dtype=dtype, vmem_budget=budget)
+            if pse is not None:
+                segments.append(ChainSegment("dw_se", (i, i + 1), pse))
+                h, w = ho, wo
+                i += 2
+                continue
         if isinstance(s, PW):
             pp = blocking.plan_pwconv(b * h * w, c, s.features, dtype=dtype,
                                       vmem_budget=budget)
             segments.append(ChainSegment("pw", (i,), pp))
             c = s.features
+        elif isinstance(s, SE):
+            segments.append(ChainSegment("se", (i,), blocking.plan_se(
+                b, c, s.reduce, dtype=dtype, vmem_budget=budget)))
+        elif isinstance(s, FusedMB):
+            ho, wo = s.out_dims(h, w)
+            segments.append(ChainSegment("mb", (i,), blocking.plan_mb(
+                ho, wo, c, s.features, s.hf, s.wf, stride=s.stride,
+                dtype=dtype, vmem_budget=budget)))
+            h, w, c = ho, wo, s.features
         else:
             ho, wo = s.out_dims(h, w)
             hi_v = (ho - 1) * s.stride + s.hf
@@ -293,7 +439,7 @@ def plan(spec: SeparableSpec, x_shape: Sequence[int], *,
 
     residual_fused = bool(
         res_active and segments
-        and segments[-1].kind in ("fused3", "fused2"))
+        and segments[-1].kind in blocking.FUSED_KINDS)
     cp = ChainPlan(
         segments=tuple(segments),
         residual=res_active,
@@ -417,6 +563,33 @@ def chain_traffic(spec: SeparableSpec, chain_plan: ChainPlan,
                 block_co=seg.plan.block_co, slab_h=seg.plan.slab_h,
                 dtype_bytes=nb)
             h, w, c = ho, wo, proj.features
+        elif seg.kind == "fusedmb":
+            mb, proj = stages[seg.stages[0]], stages[seg.stages[1]]
+            ho, wo = mb.out_dims(h, w)
+            hi_v = (ho - 1) * mb.stride + mb.hf
+            wi_v = (wo - 1) * mb.stride + mb.wf
+            t = it.fused_mb_traffic(
+                b, hi_v, wi_v, c, mb.features, proj.features, mb.hf,
+                mb.wf, mb.stride, block_co=seg.plan.block_co,
+                slab_h=seg.plan.slab_h, dtype_bytes=nb)
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "dw_se":
+            d, se = stages[seg.stages[0]], stages[seg.stages[1]]
+            ho, wo = d.out_dims(h, w)
+            hi_v = (ho - 1) * d.stride + d.hf
+            wi_v = (wo - 1) * d.stride + d.wf
+            t = it.dw_se_traffic(b, hi_v, wi_v, c, se.reduce, d.hf, d.wf,
+                                 d.stride, dtype_bytes=nb)
+            h, w = ho, wo
+        elif seg.kind == "se":
+            se = stages[seg.stages[0]]
+            t = it.se_traffic(b, h, w, c, se.reduce, dtype_bytes=nb)
+        elif seg.kind == "mb":
+            mb = stages[seg.stages[0]]
+            ho, wo = mb.out_dims(h, w)
+            t = it.mb_traffic(b, h, w, c, mb.features, mb.hf, mb.wf,
+                              mb.stride, dtype_bytes=nb)
+            h, w, c = ho, wo, mb.features
         elif seg.kind == "pw":
             st = stages[seg.stages[0]]
             t = it.pwconv_traffic_rtrd(

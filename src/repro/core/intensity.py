@@ -253,6 +253,97 @@ def separable_traffic_fused3(
     return Traffic(flops, bytes_)
 
 
+def fused_mb_traffic(
+    b: int, hi: int, wi: int, ci: int, c: int, co: int,
+    hf: int, wf: int, stride: int,
+    block_co: int | None = None, slab_h: int | None = None,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Fused-MBConv kernel (kernels/fused_mbconv.py): full ``hf x wf`` conv
+    -> act -> PW-project in ONE pass.  ``ci`` is the raw-input width, ``c``
+    the conv-output (expanded) width, ``co`` the projected width.  Streams:
+    raw input once per Co panel, the dense conv filter per grid cell, the
+    project weight per (batch, slab), output once — the expanded tensor
+    (``B*Ho*Wo*C``) never exists in HBM.  The conv compute is replayed per
+    Co panel (recompute instead of round-trip)."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    n_co = math.ceil(co / (block_co or co))
+    n_slabs = math.ceil(ho / slab_h) if slab_h else 1
+    flops = (n_co * 2.0 * b * ho * wo * ci * c * hf * wf  # conv per Co panel
+             + 2.0 * b * ho * wo * c * co)                # PW-project stage
+    bytes_ = dtype_bytes * (
+        n_co * b * hi * wi * ci               # RAW input, once per Co panel
+        + n_co * n_slabs * b * hf * wf * ci * c  # conv filter per grid cell
+        + n_slabs * b * c * co                # project W per (batch, slab)
+        + b * ho * wo * co                    # output stored once
+        # conv intermediate: 0 — never leaves VMEM (DESIGN.md §10)
+    ) + separable_slab_halo_bytes(b, wi, ci, hf, stride, n_slabs, n_co,
+                                  dtype_bytes)
+    return Traffic(flops, bytes_)
+
+
+def mb_traffic(
+    b: int, h: int, w: int, ci: int, c: int, hf: int, wf: int, stride: int,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Standalone dense conv (the fused-MBConv degradation target,
+    XLA-lowered): input read once, filter once, output stored once.
+    ``h, w`` are the UNPADDED input dims (SAME geometry)."""
+    ho, wo = -(-h // stride), -(-w // stride)
+    flops = 2.0 * b * ho * wo * ci * c * hf * wf
+    bytes_ = dtype_bytes * (b * h * w * ci + hf * wf * ci * c
+                            + b * ho * wo * c)
+    return Traffic(flops, bytes_)
+
+
+def se_traffic(
+    b: int, h: int, w: int, c: int, c_se: int,
+    dtype_bytes: int = 4,
+) -> Traffic:
+    """Standalone squeeze-excite pass: the input tensor is read by the
+    global pool, read AGAIN by the channelwise scale, and the scaled
+    result stored — two reads + one write of ``B*H*W*C`` purely to apply
+    two tiny FCs over the spatial mean (the round-trip the fused ``dw_se``
+    segment removes).  Gate FLOPs: pool + two FCs + sigmoid + scale."""
+    flops = (b * h * w * c                  # pool accumulation
+             + 2.0 * b * c * c_se * 2      # the two FCs
+             + 4.0 * b * c                  # sigmoid (approx)
+             + b * h * w * c)               # the scale
+    bytes_ = dtype_bytes * (
+        3 * b * h * w * c                   # pool read + scale read + store
+        + 2 * c * c_se + c_se + c           # gate weights + biases
+    )
+    return Traffic(flops, bytes_)
+
+
+def dw_se_traffic(
+    b: int, hi: int, wi: int, c: int, c_se: int, hf: int, wf: int,
+    stride: int, dtype_bytes: int = 4,
+) -> Traffic:
+    """Fused DW + SE-epilogue kernel (kernels/se_epilogue.py): the DW
+    output stays VMEM-resident through the pool, the gate FCs and the
+    scale, and is stored exactly once, already scaled — vs the standalone
+    composition's store + two re-reads (:func:`se_traffic`).  Input read
+    once, DW filter + gate weights once; full-channel single-slab
+    residency means no panel or halo re-reads at all."""
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    flops = (2.0 * b * ho * wo * c * hf * wf    # DW
+             + b * ho * wo * c                   # pool
+             + 2.0 * b * c * c_se * 2           # the two FCs
+             + 4.0 * b * c                       # sigmoid (approx)
+             + b * ho * wo * c)                  # the scale
+    bytes_ = dtype_bytes * (
+        b * hi * wi * c                          # input read once
+        + hf * wf * c                            # DW filter
+        + 2 * c * c_se + c_se + c                # gate weights + biases
+        + b * ho * wo * c                        # output stored once
+        # DW intermediate + gate: 0 — never leave VMEM (DESIGN.md §10)
+    )
+    return Traffic(flops, bytes_)
+
+
 def separable_traffic_2stage(
     b: int, h: int, w: int, ci: int, c: int, co: int,
     hf: int, wf: int, stride: int,

@@ -105,6 +105,28 @@ MOBILENET_V2_BODY: Tuple[Tuple[int, int, int, int], ...] = (
     (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
 )
 
+#: MnasNet-A1 body after the 32-channel stem: (t, c, n, s, k, se) rows
+#: (Tan et al. 2019, Fig. 7 — expansion, channels, repeats, stride,
+#: DW kernel, squeeze-excite).  The t=1 first row is the SepConv block.
+MNASNET_A1_BODY: Tuple[Tuple[int, int, int, int, int, bool], ...] = (
+    (1, 16, 1, 1, 3, False), (6, 24, 2, 2, 3, False),
+    (3, 40, 3, 2, 5, True), (6, 80, 4, 2, 3, False),
+    (6, 112, 2, 1, 3, True), (6, 160, 3, 2, 5, True),
+    (6, 320, 1, 1, 3, False),
+)
+
+#: EfficientNet-Lite0 body after the 32-channel stem: (t, c, n, s, k,
+#: fused) rows — the B0 table (Tan & Le 2019) with the Lite deployment
+#: edits (no SE, relu6) and the early stages declared as fused-MBConv
+#: (full 3x3 conv to the expanded width, the EfficientNet-Lite /
+#: EdgeTPU-style mobile idiom this PR's ``FusedMB`` stage models).
+EFFICIENTNET_LITE0_BODY: Tuple[Tuple[int, int, int, int, int, bool], ...] = (
+    (1, 16, 1, 1, 3, False), (6, 24, 2, 2, 3, True),
+    (6, 40, 2, 2, 3, True), (6, 80, 3, 2, 3, False),
+    (6, 112, 3, 1, 5, False), (6, 192, 4, 2, 5, False),
+    (6, 320, 1, 1, 3, False),
+)
+
 
 def mobilenet_v1_spec(width_mult: float = 1.0) -> NetworkSpec:
     """The 13-block MobileNetV1 body: DW(+bias) -> PW(+bias) per block."""
@@ -137,6 +159,64 @@ def mobilenet_v2_spec(width_mult: float = 1.0) -> NetworkSpec:
                     c, co, expand=t, stride=stride))
             c = co
     return NetworkSpec(name=f"mobilenet_v2_{width_mult:g}",
+                       c_in=c_in, blocks=tuple(blocks))
+
+
+def mnasnet_a1_spec(width_mult: float = 1.0) -> NetworkSpec:
+    """The MnasNet-A1 body: SepConv + MBConv blocks, three stages carrying
+    squeeze-excite (SE reduced width = 1/4 of the BLOCK INPUT, the MnasNet
+    convention).  The SE rows declare 4-stage (PW, DW, SE, PW) chains —
+    the planner's ``dw_se`` window fuses the gate onto the DW pass when
+    the full-channel working set fits VMEM (DESIGN.md §10)."""
+    c = make_divisible(32 * width_mult)
+    c_in = c
+    blocks = []
+    for t, co, n, s, k, se in MNASNET_A1_BODY:
+        co = make_divisible(co * width_mult)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            if t == 1:
+                blocks.append(chain.SeparableSpec(stages=(
+                    chain.DW(stride=stride, activation="relu"),
+                    chain.PW(co),
+                ), residual="auto"))
+            elif se:
+                blocks.append(chain.mbconv_se_spec(
+                    c, co, expand=t, stride=stride, hf=k))
+            else:
+                blocks.append(chain.inverted_residual_spec(
+                    c, co, expand=t, stride=stride, hf=k))
+            c = co
+    return NetworkSpec(name=f"mnasnet_a1_{width_mult:g}",
+                       c_in=c_in, blocks=tuple(blocks))
+
+
+def efficientnet_lite0_spec(width_mult: float = 1.0) -> NetworkSpec:
+    """The EfficientNet-Lite0 body: the B0 stage table with the Lite
+    deployment edits (SE removed, relu6) and the early stages declared as
+    fused-MBConv — a full 3x3 conv to the expanded width in place of
+    PW-expand + DW.  Those rows plan to the single-pass ``fusedmb``
+    segment (conv + PW-project in one kernel) when VMEM allows."""
+    c = make_divisible(32 * width_mult)
+    c_in = c
+    blocks = []
+    for t, co, n, s, k, fused in EFFICIENTNET_LITE0_BODY:
+        co = make_divisible(co * width_mult)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            if t == 1:
+                blocks.append(chain.SeparableSpec(stages=(
+                    chain.DW(stride=stride, activation="relu6"),
+                    chain.PW(co),
+                ), residual="auto"))
+            elif fused:
+                blocks.append(chain.fused_mbconv_spec(
+                    c, co, expand=t, stride=stride, hf=k))
+            else:
+                blocks.append(chain.inverted_residual_spec(
+                    c, co, expand=t, stride=stride, hf=k))
+            c = co
+    return NetworkSpec(name=f"efficientnet_lite0_{width_mult:g}",
                        c_in=c_in, blocks=tuple(blocks))
 
 
@@ -231,7 +311,7 @@ def _block_problems(net: NetworkSpec, x_shape, dtype,
     for spec, pol in zip(net.blocks, policies):
         problems.append(((b, h, w, c), d.name))
         for s in spec.stages:
-            if isinstance(s, chain.DW):
+            if isinstance(s, (chain.DW, chain.FusedMB)):
                 h, w = s.out_dims(h, w)
         c = spec.out_channels(c)
         d = pol.dtype_policy.out_dtype(d)

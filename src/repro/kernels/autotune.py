@@ -59,7 +59,9 @@ from repro.kernels.policy import KernelPolicy
 #: v2: problem signatures gained the per-segment dtype policy (DESIGN §7) —
 #: v1 keys hashed only the input dtype, so a bf16-streamed winner could
 #: replay onto a native fp32 run of the same problem.
-CACHE_VERSION = 2
+#: v3: the stage algebra grew SE and FusedMB stages (DESIGN §10); v2 stage
+#: signatures could collide a FusedMB with a PW of the same features.
+CACHE_VERSION = 3
 
 #: Feasible candidates measured per chain segment (incl. the analytic plan).
 MAX_SEGMENT_CANDIDATES = 8
@@ -84,9 +86,18 @@ def default_cache_path() -> str:
 # ---------------------------------------------------------------------------
 
 def _stage_signature(s) -> dict:
-    """Duck-typed stage descriptor (PW has ``features``; DW has ``stride``),
-    mirroring kernels/lowering.py's duck-typing so this module needs no
-    import of core/chain."""
+    """Duck-typed stage descriptor, mirroring kernels/lowering.py's
+    duck-typing so this module needs no import of core/chain.  Order
+    matters: SE is the only stage with ``reduce``; FusedMB has BOTH
+    ``features`` and ``stride`` (a PW has only ``features``)."""
+    if hasattr(s, "reduce"):
+        return {"kind": "se", "reduce": int(s.reduce),
+                "activation": s.activation}
+    if hasattr(s, "features") and hasattr(s, "stride"):
+        return {"kind": "mb", "features": int(s.features),
+                "stride": int(s.stride), "hf": int(s.hf), "wf": int(s.wf),
+                "padding": s.padding.lower(), "activation": s.activation,
+                "bias": bool(s.bias)}
     if hasattr(s, "features"):
         return {"kind": "pw", "features": int(s.features),
                 "activation": s.activation, "bias": bool(s.bias)}
@@ -249,13 +260,13 @@ class _SegGeom:
     kind: str
     ho: int
     wo: int
-    ci: int        # segment input channels (raw input for fused3)
+    ci: int        # segment input channels (raw input for fused3/fusedmb)
     c: int         # DW / expanded width (fused segments)
     co: int        # output channels
     stride: int
     hf: int
     wf: int
-    g: int         # GEMM rows (pw only)
+    g: int         # GEMM rows (pw); SE reduced width (dw_se / se)
     residual: bool  # the folded residual rides this segment's kernel
 
 
@@ -280,6 +291,29 @@ def _segment_geoms(stages, cp: ChainPlan,
             geoms.append(_SegGeom("fused2", ho, wo, c, c, proj.features,
                                   d.stride, d.hf, d.wf, 0, with_res))
             h, w, c = ho, wo, proj.features
+        elif seg.kind == "fusedmb":
+            mb, proj = (stages[i] for i in seg.stages)
+            ho, wo = mb.out_dims(h, w)
+            geoms.append(_SegGeom("fusedmb", ho, wo, c, mb.features,
+                                  proj.features, mb.stride, mb.hf, mb.wf,
+                                  0, with_res))
+            h, w, c = ho, wo, proj.features
+        elif seg.kind == "dw_se":
+            d, se = (stages[i] for i in seg.stages)
+            ho, wo = d.out_dims(h, w)
+            geoms.append(_SegGeom("dw_se", ho, wo, c, c, c, d.stride, d.hf,
+                                  d.wf, se.reduce, False))
+            h, w = ho, wo
+        elif seg.kind == "se":
+            se = stages[seg.stages[0]]
+            geoms.append(_SegGeom("se", h, w, c, c, c, 1, 0, 0, se.reduce,
+                                  False))
+        elif seg.kind == "mb":
+            mb = stages[seg.stages[0]]
+            ho, wo = mb.out_dims(h, w)
+            geoms.append(_SegGeom("mb", ho, wo, c, mb.features, mb.features,
+                                  mb.stride, mb.hf, mb.wf, 0, False))
+            h, w, c = ho, wo, mb.features
         elif seg.kind == "pw":
             st = stages[seg.stages[0]]
             geoms.append(_SegGeom("pw", h, w, c, 0, st.features, 1, 0, 0,
@@ -327,6 +361,26 @@ def segment_candidates(geom: _SegGeom, base: BlockPlan, dtype,
                               residual=geom.residual)
                 if p is not None and p not in cands:
                     cands.append(p)
+    elif geom.kind == "fusedmb":
+        for cob in blocking.co_candidates(geom.co):
+            if len(cands) >= max_candidates:
+                break
+            for slab_h in blocking.slab_candidates(geom.ho):
+                if len(cands) >= max_candidates:
+                    break
+                p = blocking.plan_fused_mb_at(
+                    geom.ho, geom.wo, geom.ci, geom.c, geom.co,
+                    block_co=cob, slab_h=slab_h, stride=geom.stride,
+                    hf=geom.hf, wf=geom.wf, dtype=dtype,
+                    vmem_budget=vmem_budget, residual=geom.residual)
+                if p is not None and p not in cands:
+                    cands.append(p)
+    elif geom.kind in ("dw_se", "se", "mb"):
+        # no block ladder: dw_se is feasible only at full-channel
+        # single-slab residency (anything else is WRONG, not slower), the
+        # standalone SE GEMMs are tiny, and the standalone conv is
+        # XLA-lowered — the analytic plan is the only candidate
+        pass
     elif geom.kind == "pw":
         for bg in blocking.PW_G_CANDIDATES:
             if len(cands) >= max_candidates:

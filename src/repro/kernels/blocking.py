@@ -392,13 +392,193 @@ def plan_separable3(ho: int, wo: int, ci: int, c: int, co: int, *,
 
 
 # ---------------------------------------------------------------------------
+# fused MBConv (full conv -> act -> PW-project): conv-on-the-fly
+# ---------------------------------------------------------------------------
+
+def fused_mb_vmem_bytes(wo: int, slab_h: int, ci: int, cb: int, cob: int,
+                        hf: int = 3, wf: int = 3, stride: int = 1,
+                        itemsize: int = 4, residual: bool = False) -> int:
+    """Working-set bytes of the fused-MBConv kernel (full ``hf x wf`` conv
+    -> act -> PW-project in one pass) at blocks ``(cb, cob, slab_h)`` with
+    raw-input channels ``ci``.
+
+    Like :func:`fused3_vmem_bytes` the raw input window is fetched whole
+    (all ``ci`` channels — it is every conv tap's A-operand), but there is
+    no expanded-value slab: each reduction step computes the conv
+    intermediate directly at ``(slab_h, wo, cb)`` and feeds it to the
+    projection GEMM.  The conv filter tile is ``(hf, wf, ci, cb)`` — the
+    dense filter replaces the depthwise one + expand weight.  Single source
+    of truth for :func:`plan_fused_mb` and the static analyzer.
+    """
+    slab_hi = (slab_h - 1) * stride + hf
+    wiu = (wo - 1) * stride + wf
+    out_side = slab_h * wo * cob * (ACC_BYTES + itemsize)
+    if residual:
+        out_side += 2 * slab_h * wo * cob * itemsize
+    out_side += 2 * slab_hi * wiu * ci * itemsize  # raw input, dbl-buffered
+    per_c = (2 * hf * wf * ci * itemsize       # conv filter tile, dbl-buffered
+             + slab_h * wo * ACC_BYTES         # conv intermediate (fp32 value)
+             + 2 * cob * itemsize)             # PW weight tile, dbl-buffered
+    return out_side + cb * per_c
+
+
+def _fused_mb_plan_at(c: int, ci: int, slab_h: int, cob: int, wo: int,
+                      hf: int, wf: int, stride: int, itemsize: int,
+                      residual: bool, vmem_budget: int,
+                      min_cb: int) -> Optional[int]:
+    """Largest snapped conv-output channel block >= min_cb that fits."""
+    base = fused_mb_vmem_bytes(wo, slab_h, ci, 0, cob, hf, wf, stride,
+                               itemsize, residual)
+    per_c = fused_mb_vmem_bytes(wo, slab_h, ci, 1, cob, hf, wf, stride,
+                                itemsize, residual) - base
+    rem = vmem_budget - base
+    if rem < per_c:
+        return None
+    cb = snap_channels(int(rem // per_c), c)
+    return cb if cb >= min_cb else None
+
+
+def plan_fused_mb_at(ho: int, wo: int, ci: int, c: int, co: int, *,
+                     block_co: int, slab_h: int,
+                     stride: int = 1, hf: int = 3, wf: int = 3,
+                     dtype=jnp.float32,
+                     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                     residual: bool = False) -> Optional[BlockPlan]:
+    """Feasibility probe for the fused-MBConv kernel at an explicit
+    ``(block_co, slab_h)`` — the autotuner's candidate constructor."""
+    nb = dtype_bytes(dtype)
+    cb = _fused_mb_plan_at(c, ci, slab_h, block_co, wo, hf, wf, stride, nb,
+                           residual, vmem_budget, 1)
+    if cb is None:
+        return None
+    n_slabs = -(-ho // slab_h)
+    return BlockPlan(
+        block_c=cb, block_co=block_co, slab_h=slab_h, n_slabs=n_slabs,
+        halo_rows=max(hf - stride, 0) if n_slabs > 1 else 0,
+        vmem_bytes=fused_mb_vmem_bytes(wo, slab_h, ci, cb, block_co, hf, wf,
+                                       stride, nb, residual),
+        dtype_bytes=nb,
+    )
+
+
+def plan_fused_mb(ho: int, wo: int, ci: int, c: int, co: int, *,
+                  stride: int = 1, hf: int = 3, wf: int = 3,
+                  dtype=jnp.float32,
+                  vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  residual: bool = False) -> Optional[BlockPlan]:
+    """Block plan for the fused-MBConv pass (full conv -> act -> PW-project
+    in ONE kernel), or None when nothing fits (callers degrade to a
+    standalone XLA conv + standalone PW).  ``ci`` is the raw-input width,
+    ``c`` the conv-output (expanded) width, ``co`` the projected width.
+    Same preference order as :func:`plan_separable3`."""
+    nb = dtype_bytes(dtype)
+    halo = max(hf - stride, 0)
+    for cob in co_candidates(co):
+        for min_cb in (min(c, LANES), 1):
+            for slab_h in slab_candidates(ho):
+                cb = _fused_mb_plan_at(c, ci, slab_h, cob, wo, hf, wf,
+                                       stride, nb, residual, vmem_budget,
+                                       min_cb)
+                if cb is None:
+                    continue
+                n_slabs = -(-ho // slab_h)
+                return BlockPlan(
+                    block_c=cb, block_co=cob, slab_h=slab_h,
+                    n_slabs=n_slabs,
+                    halo_rows=halo if n_slabs > 1 else 0,
+                    vmem_bytes=fused_mb_vmem_bytes(
+                        wo, slab_h, ci, cb, cob, hf, wf, stride, nb,
+                        residual),
+                    dtype_bytes=nb,
+                )
+    return None
+
+
+def plan_mb(ho: int, wo: int, ci: int, c: int, hf: int = 3, wf: int = 3, *,
+            stride: int = 1, dtype=jnp.float32,
+            vmem_budget: int = DEFAULT_VMEM_BUDGET) -> BlockPlan:
+    """Standalone dense-conv segment (the fused-MBConv degradation target).
+    It lowers to the XLA convolution — the dense conv is MXU-shaped as-is;
+    the Pallas win is fusing the projection — so the plan records geometry
+    for traffic/telemetry and claims zero Pallas VMEM."""
+    return BlockPlan(
+        block_c=c, block_co=0, slab_h=ho, n_slabs=1, halo_rows=0,
+        vmem_bytes=0, dtype_bytes=dtype_bytes(dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# squeeze-excite: DW + SE-epilogue fused pass, and the standalone two-GEMM
+# ---------------------------------------------------------------------------
+
+def dw_se_vmem_bytes(hiu: int, wiu: int, ho: int, wo: int, c: int,
+                     c_se: int, hf: int = 3, wf: int = 3,
+                     itemsize: int = 4) -> int:
+    """Working set of the DW + SE-epilogue kernel.  The SE gate mixes ALL
+    channels of the pooled DW output, so the pass requires full-channel,
+    full-spatial residency: 2x input window + filter at all ``c`` channels,
+    the fp32 DW accumulator + output tile, and the (tiny) gate weights."""
+    return (c * (2 * hiu * wiu * itemsize + hf * wf * itemsize
+                 + ho * wo * (ACC_BYTES + itemsize))
+            + 4 * c * c_se * itemsize          # w1 + w2 tiles, dbl-buffered
+            + 2 * (c_se + c) * itemsize)       # b1 + b2 vectors
+
+
+def plan_dw_se(hiu: int, wiu: int, ho: int, wo: int, c: int, c_se: int,
+               hf: int = 3, wf: int = 3, *,
+               dtype=jnp.float32,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET
+               ) -> Optional[BlockPlan]:
+    """Plan for the fused DW + SE-epilogue pass, or None when the
+    full-channel working set exceeds the budget (callers degrade to a
+    standalone DW + a standalone SE two-GEMM pass).  Unlike the other fused
+    planners there is no block ladder to walk: the squeeze FC needs the
+    whole pooled channel vector, so partial-channel residency is not a
+    degraded plan — it is a wrong one.  ``block_g`` carries ``c_se``."""
+    nb = dtype_bytes(dtype)
+    need = dw_se_vmem_bytes(hiu, wiu, ho, wo, c, c_se, hf, wf, nb)
+    if need > vmem_budget:
+        return None
+    return BlockPlan(
+        block_c=c, block_co=0, slab_h=ho, n_slabs=1, halo_rows=0,
+        vmem_bytes=need, dtype_bytes=nb, block_g=c_se,
+    )
+
+
+def plan_se(b: int, c: int, c_se: int, *, dtype=jnp.float32,
+            vmem_budget: int = DEFAULT_VMEM_BUDGET) -> BlockPlan:
+    """Standalone squeeze-excite segment: global pool + two tiny GEMMs
+    (reduce, expand) + sigmoid scale.  The GEMMs run through the pwconv
+    kernel at its own planned blocks; the claim here is the larger of the
+    two GEMM working sets.  ``block_g`` carries ``c_se``."""
+    nb = dtype_bytes(dtype)
+    p1 = plan_pwconv(b, c, c_se, dtype=dtype, vmem_budget=vmem_budget)
+    p2 = plan_pwconv(b, c_se, c, dtype=dtype, vmem_budget=vmem_budget)
+    return BlockPlan(
+        block_c=c, block_co=0, slab_h=1, n_slabs=1, halo_rows=0,
+        vmem_bytes=max(p1.vmem_bytes, p2.vmem_bytes),
+        dtype_bytes=nb, block_g=c_se,
+    )
+
+
+# ---------------------------------------------------------------------------
 # whole-chain plan schema (core/chain.plan -> kernels/lowering.lower)
 # ---------------------------------------------------------------------------
 
 #: Segment kinds a chain lowers to.  ``fused3`` = one kernel pass for
 #: PW-expand -> DW -> PW-project (expand-on-the-fly); ``fused2`` = one pass
-#: for DW -> PW (the PR-2 kernel); ``pw`` / ``dw`` = standalone kernels.
-SEGMENT_KINDS = ("fused3", "fused2", "pw", "dw")
+#: for DW -> PW (the PR-2 kernel); ``fusedmb`` = one pass for a full
+#: ``hf x wf`` conv -> act -> PW-project (the fused-MBConv block);
+#: ``dw_se`` = one pass for DW with the squeeze-excite gate applied as an
+#: in-kernel epilogue; ``pw`` / ``dw`` = standalone kernels; ``se`` = the
+#: standalone squeeze-excite two-GEMM pass; ``mb`` = a standalone dense
+#: conv (XLA-lowered — the fused-MBConv degradation target).
+SEGMENT_KINDS = ("fused3", "fused2", "fusedmb", "dw_se", "pw", "dw", "se",
+                 "mb")
+
+#: Segment kinds whose kernels take a residual operand (the chain residual
+#: can fold into their final store).
+FUSED_KINDS = ("fused3", "fused2", "fusedmb")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -434,15 +614,17 @@ class ChainPlan:
 
     @property
     def n_kernel_passes(self) -> int:
-        return len(self.segments) + (
-            1 if self.residual and not self.residual_fused else 0)
+        # a standalone SE segment runs two GEMM passes (reduce + expand);
+        # a standalone "mb" conv lowers to XLA but still counts as one pass
+        # of HBM round-trip; every other segment is one kernel pass.
+        n = sum(2 if s.kind == "se" else 1 for s in self.segments)
+        return n + (1 if self.residual and not self.residual_fused else 0)
 
     @property
     def fully_fused(self) -> bool:
         """The whole chain (incl. any residual) runs as ONE kernel pass."""
         return len(self.segments) == 1 and self.segments[0].kind in (
-            "fused3", "fused2") and (self.residual_fused or
-                                     not self.residual)
+            FUSED_KINDS) and (self.residual_fused or not self.residual)
 
 
 # ---------------------------------------------------------------------------

@@ -40,20 +40,29 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 from repro.kernels.blocking import ChainPlan
 from repro.kernels.epilogue import apply_epilogue
+from repro.kernels.fused_mbconv import fused_mbconv_pallas
 from repro.kernels.policy import DEFAULT_POLICY, KernelPolicy
+from repro.kernels.se_epilogue import dw_se_pallas
 from repro.kernels.separable_fused import separable_fused_pallas
 from repro.runtime import failures, faultinject
 
 #: Per-stage parameter leaves the lowering consumes: PW stages take
 #: ``{"w": (Ci, Co)[, "b": (Co,)]}``, DW stages ``{"f": (Hf, Wf, C)[,
+#: "b": (C,)]}``, SE stages ``{"w1": (C, Cse), "b1": (Cse,), "w2":
+#: (Cse, C), "b2": (C,)}``, FusedMB stages ``{"f": (Hf, Wf, Ci, C)[,
 #: "b": (C,)]}``; params are a sequence aligned with ``spec.stages``.
-PARAM_KEYS = {"pw": ("w", "b"), "dw": ("f", "b")}
+PARAM_KEYS = {"pw": ("w", "b"), "dw": ("f", "b"),
+              "se": ("w1", "b1", "w2", "b2"), "mb": ("f", "b")}
 
 #: Fault-injection point per segment kind (repro.runtime.faultinject,
 #: DESIGN.md §9), checked before each dispatch; fused2 and fused3 share one
-#: point because they share the kernel.
+#: point because they share the kernel, as do fusedmb/mb and dw_se/se.
 _INJECT = {"fused3": "lowering:separable_fused",
            "fused2": "lowering:separable_fused",
+           "fusedmb": "lowering:fused_mbconv",
+           "mb": "lowering:fused_mbconv",
+           "dw_se": "lowering:se_epilogue",
+           "se": "lowering:se_epilogue",
            "pw": "lowering:pwconv",
            "dw": "lowering:dwconv2d"}
 
@@ -101,6 +110,89 @@ def _run_fused(seg, stages, params, y, res, *, impl, interpret,
     )
 
 
+def _run_fused_mb(seg, stages, params, y, res, *, impl, interpret,
+                  stream_dtype, out_dtype):
+    """One fused-MBConv segment (full conv + PW-project) as one pass."""
+    i_mb, i_pw = seg.stages
+    mb = stages[i_mb]
+    proj = stages[i_pw]
+    mb_f = params[i_mb]["f"].astype(stream_dtype)
+    mb_b = _cast(params[i_mb].get("b"), stream_dtype)
+    pw_w = params[i_pw]["w"].astype(stream_dtype)
+    pw_b = _cast(params[i_pw].get("b"), stream_dtype)
+    if impl == "xla":
+        out = ref.fused_mbconv_ref(
+            y, mb_f, pw_w, mb_b, pw_b, res,
+            stride=mb.stride, padding=mb.padding,
+            mb_activation=mb.activation, activation=proj.activation,
+        )
+        return out.astype(out_dtype)
+    if mb.padding.lower() == "same":
+        y = ops.pad_same(y, mb.hf, mb.wf, mb.stride)
+    elif mb.padding.lower() != "valid":
+        raise ValueError(mb.padding)
+    return fused_mbconv_pallas(
+        y, mb_f, pw_w, mb_b, pw_b, res,
+        stride=mb.stride, mb_activation=mb.activation,
+        activation=proj.activation,
+        block_c=seg.plan.block_c, block_co=seg.plan.block_co,
+        slab_h=seg.plan.slab_h, interpret=interpret,
+        out_dtype=jnp.dtype(out_dtype).name,
+    )
+
+
+def _run_dw_se(seg, stages, params, y, *, impl, interpret, stream_dtype,
+               out_dtype):
+    """One fused DW + SE-epilogue segment as one pass."""
+    i_dw, i_se = seg.stages
+    d = stages[i_dw]
+    se = stages[i_se]
+    dw_f = params[i_dw]["f"].astype(stream_dtype)
+    dw_b = _cast(params[i_dw].get("b"), stream_dtype)
+    sp = params[i_se]
+    w1, b1 = sp["w1"].astype(stream_dtype), sp["b1"].astype(stream_dtype)
+    w2, b2 = sp["w2"].astype(stream_dtype), sp["b2"].astype(stream_dtype)
+    if impl == "xla":
+        out = ref.dw_se_ref(
+            y, dw_f, w1, b1, w2, b2, dw_b,
+            stride=d.stride, padding=d.padding,
+            dw_activation=d.activation, se_activation=se.activation,
+        )
+        return out.astype(out_dtype)
+    if d.padding.lower() == "same":
+        y = ops.pad_same(y, d.hf, d.wf, d.stride)
+    elif d.padding.lower() != "valid":
+        raise ValueError(d.padding)
+    return dw_se_pallas(
+        y, dw_f, w1, b1, w2, b2, dw_b,
+        stride=d.stride, dw_activation=d.activation,
+        se_activation=se.activation, interpret=interpret,
+        out_dtype=jnp.dtype(out_dtype).name,
+    )
+
+
+def _run_se(seg, stages, params, y, policy, *, impl, interpret,
+            stream_dtype, out_dtype):
+    """One standalone SE segment: pool + two pwconv GEMM passes + the
+    sigmoid scale.  On the Pallas path the two (tiny) FCs run through the
+    pwconv kernel — the SE gate itself is elementwise XLA work; the
+    lowering owns the gate's cast back to the stream width (JX310)."""
+    se = stages[seg.stages[0]]
+    sp = params[seg.stages[0]]
+    w1, b1 = sp["w1"].astype(stream_dtype), sp["b1"].astype(stream_dtype)
+    w2, b2 = sp["w2"].astype(stream_dtype), sp["b2"].astype(stream_dtype)
+    pooled = jnp.mean(y.astype(jnp.float32), axis=(1, 2)).astype(
+        stream_dtype)
+    hid = ops.pwconv(pooled, w1, b1, activation=se.activation,
+                     impl=impl, interpret=interpret,
+                     vmem_budget=policy.vmem_budget)
+    pre = ops.pwconv(hid, w2, b2, activation=None,
+                     impl=impl, interpret=interpret,
+                     vmem_budget=policy.vmem_budget)
+    gate = jax.nn.sigmoid(pre.astype(jnp.float32)).astype(stream_dtype)
+    return (y * gate[:, None, None, :]).astype(out_dtype)
+
+
 def lower(spec, chain_plan: ChainPlan,
           policy: KernelPolicy = DEFAULT_POLICY,
           ) -> Callable[[Sequence[dict], jax.Array], jax.Array]:
@@ -136,6 +228,29 @@ def lower(spec, chain_plan: ChainPlan,
                     y = _run_fused(seg, stages, params, y, seg_res,
                                    impl=impl, interpret=interpret,
                                    stream_dtype=sdt, out_dtype=k_out)
+                elif seg.kind == "fusedmb":
+                    y = _run_fused_mb(seg, stages, params, y, seg_res,
+                                      impl=impl, interpret=interpret,
+                                      stream_dtype=sdt, out_dtype=k_out)
+                elif seg.kind == "dw_se":
+                    y = _run_dw_se(seg, stages, params, y,
+                                   impl=impl, interpret=interpret,
+                                   stream_dtype=sdt, out_dtype=k_out)
+                elif seg.kind == "se":
+                    y = _run_se(seg, stages, params, y, policy,
+                                impl=impl, interpret=interpret,
+                                stream_dtype=sdt, out_dtype=k_out)
+                elif seg.kind == "mb":
+                    # standalone dense conv: XLA-lowered on every impl —
+                    # the dense conv is MXU-shaped as-is, the Pallas win is
+                    # the fused projection (segment kind "fusedmb")
+                    st = stages[seg.stages[0]]
+                    p = params[seg.stages[0]]
+                    y = ref.conv2d_ref(
+                        y, p["f"].astype(sdt), _cast(p.get("b"), sdt),
+                        stride=st.stride, padding=st.padding,
+                        activation=st.activation,
+                    ).astype(k_out)
                 elif seg.kind == "pw":
                     st = stages[seg.stages[0]]
                     p = params[seg.stages[0]]

@@ -198,6 +198,119 @@ def separable_fused_ref(
     return out.astype(x.dtype)
 
 
+def conv2d_ref(
+    x: jax.Array,
+    f: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "valid",
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Full dense conv (the FusedMB stage).  x: (B, Hi, Wi, Ci);
+    f: (Hf, Wf, Ci, Co) -> (B, Ho, Wo, Co), fp32 accumulation."""
+    assert x.ndim == 4 and f.ndim == 4 and x.shape[-1] == f.shape[2]
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        f.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = _epilogue(y, bias, activation)
+    return y.astype(x.dtype)
+
+
+def fused_mbconv_ref(
+    x: jax.Array,
+    mb_f: jax.Array,
+    pw_w: jax.Array,
+    mb_bias: Optional[jax.Array] = None,
+    pw_bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "valid",
+    mb_activation: Optional[str] = "relu6",
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Oracle for the fused-MBConv block (kernels/fused_mbconv.py): full
+    conv -> act -> PW-project, the conv output kept fp32 into the GEMM
+    (the unfused composition rounds it to the activation dtype between)."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        mb_f.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = _epilogue(y, mb_bias.astype(jnp.float32)
+                  if mb_bias is not None else None, mb_activation)
+    out = jnp.dot(
+        y, pw_w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    out = _epilogue(out, pw_bias, activation)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def se_ref(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    activation: str = "relu",
+) -> jax.Array:
+    """Squeeze-excite oracle: global-avg-pool -> FC-reduce (``activation``)
+    -> FC-expand -> sigmoid -> channelwise scale.  x: (B, H, W, C);
+    w1: (C, Cse); w2: (Cse, C) -> (B, H, W, C), all fp32 internally."""
+    xf = x.astype(jnp.float32)
+    pooled = jnp.mean(xf, axis=(1, 2))                       # (B, C)
+    hid = _epilogue(jnp.dot(pooled, w1.astype(jnp.float32),
+                            preferred_element_type=jnp.float32),
+                    b1.astype(jnp.float32), activation)
+    gate = jax.nn.sigmoid(jnp.dot(hid, w2.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)
+                          + b2.astype(jnp.float32))          # (B, C)
+    return (xf * gate[:, None, None, :]).astype(x.dtype)
+
+
+def dw_se_ref(
+    x: jax.Array,
+    dw_f: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    dw_bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "valid",
+    dw_activation: Optional[str] = "relu6",
+    se_activation: str = "relu",
+) -> jax.Array:
+    """Oracle for the fused DW + SE-epilogue pass
+    (kernels/se_epilogue.py): the DW output stays fp32 into the pool, the
+    two gate FCs and the final scale (the unfused composition rounds it to
+    the activation dtype in between)."""
+    y = dwconv2d_ref(x.astype(jnp.float32), dw_f.astype(jnp.float32),
+                     stride=stride, padding=padding)
+    if dw_bias is not None:
+        y = y + dw_bias.astype(jnp.float32)
+    y = _epilogue(y, None, dw_activation)
+    pooled = jnp.mean(y, axis=(1, 2))                        # (B, C)
+    hid = _epilogue(jnp.dot(pooled, w1.astype(jnp.float32),
+                            preferred_element_type=jnp.float32),
+                    b1.astype(jnp.float32), se_activation)
+    gate = jax.nn.sigmoid(jnp.dot(hid, w2.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)
+                          + b2.astype(jnp.float32))
+    return (y * gate[:, None, None, :]).astype(x.dtype)
+
+
 def matmul_rtra_ref(
     a: jax.Array, b: jax.Array, *, block_k: int = 128
 ) -> jax.Array:

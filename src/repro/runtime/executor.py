@@ -34,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.runtime import failures, faultinject, ladder, quarantine, telemetry
 
-#: One attempt per ladder rung: fused3 -> fused2 -> unfused -> ref.
+#: One attempt per ladder rung:
+#: fused3 -> fusedmb -> fused2 -> dw_se -> unfused -> ref.
 MAX_ATTEMPTS = len(ladder.RUNGS)
 
 

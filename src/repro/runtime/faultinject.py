@@ -34,6 +34,12 @@ INJECTION_POINTS = {
     "lowering:separable_fused":
         "fused2/fused3 segment dispatch (kernels/lowering._run_fused; the "
         "two rungs share the kernel, so they share the point)",
+    "lowering:fused_mbconv":
+        "fusedmb/mb segment dispatch (kernels/lowering._run_fused_mb and "
+        "the standalone conv; the two rungs share the point)",
+    "lowering:se_epilogue":
+        "dw_se/se segment dispatch (kernels/lowering._run_dw_se and "
+        "_run_se; the two rungs share the point)",
     "lowering:pwconv":
         "standalone pw segment dispatch (kernels/lowering.lower)",
     "lowering:dwconv2d":

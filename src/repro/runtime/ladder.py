@@ -10,11 +10,14 @@ paper's data-movement wins for the guarantee of running anywhere.
 A failure maps to a BAN — the rung the quarantine removes — from the
 segment tag the taxonomy carries:
 
-* a ``fused3`` / ``fused2`` segment failure bans exactly that fusion kind
-  (the planner's next walk degrades the window one step);
-* a standalone ``pw`` / ``dw`` segment failure bans ``unfused`` — the
-  Pallas kernels themselves are unusable for this problem, so the executor
-  escalates straight to the reference rung;
+* a ``fused3`` / ``fusedmb`` / ``fused2`` / ``dw_se`` segment failure bans
+  exactly that fusion kind (the planner's next walk degrades the window
+  one step — fusedmb to mb+pw, dw_se to dw+se);
+* a standalone ``pw`` / ``dw`` / ``se`` / ``mb`` segment failure bans
+  ``unfused`` — the Pallas kernels themselves are unusable for this
+  problem, so the executor escalates straight to the reference rung (an
+  ``se`` failure is two pwconv passes failing; ``mb`` is already XLA but
+  shares the segment taxonomy);
 * an untagged failure (chain-scope compile error, numeric-guard trip on
   the final output) bans the highest rung the failing plan actually used.
 """
@@ -22,16 +25,15 @@ from __future__ import annotations
 
 from typing import Optional
 
-RUNGS = ("fused3", "fused2", "unfused", "ref")
+RUNGS = ("fused3", "fusedmb", "fused2", "dw_se", "unfused", "ref")
 
 
 def plan_rung(cp) -> str:
     """The ladder rung a ChainPlan executes at: its highest fusion kind."""
     kinds = {seg.kind for seg in cp.segments}
-    if "fused3" in kinds:
-        return "fused3"
-    if "fused2" in kinds:
-        return "fused2"
+    for r in ("fused3", "fusedmb", "fused2", "dw_se"):
+        if r in kinds:
+            return r
     return "unfused"
 
 
@@ -39,16 +41,20 @@ def ban_for_failure(failure, cp=None) -> str:
     """Which rung to quarantine for this classified failure (see module
     docstring); ``cp`` is the plan that was executing, for untagged
     failures."""
-    if failure.segment_kind in ("fused3", "fused2"):
+    if failure.segment_kind in ("fused3", "fusedmb", "fused2", "dw_se"):
         return failure.segment_kind
-    if failure.segment_kind in ("pw", "dw"):
+    if failure.segment_kind in ("pw", "dw", "se", "mb"):
         return "unfused"
     return plan_rung(cp) if cp is not None else "unfused"
 
 
 def next_rung(ban: str, banned) -> str:
     """The rung the retry lands on after banning ``ban``, given the full
-    banned set (for telemetry/warning messages)."""
+    banned set (for telemetry/warning messages).  Advisory: RUNGS
+    interleaves both stage-algebra families (separable and SE/fused-MB),
+    so the retry's ACTUAL rung is whatever the re-plan produces for the
+    spec — a fused3 ban on a chain with no FusedMB stage lands on fused2,
+    skipping the inapplicable fusedmb rung this names."""
     start = RUNGS.index(ban) + 1 if ban in RUNGS else len(RUNGS) - 1
     for r in RUNGS[start:]:
         if r == "ref" or r not in banned:

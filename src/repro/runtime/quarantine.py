@@ -41,7 +41,10 @@ QUARANTINE_VERSION = 1
 
 #: Rungs an entry may ban (the "ref" rung is never bannable — it is the
 #: fallback of last resort and fault injection is suppressed around it).
-BANNABLE = ("fused3", "fused2", "unfused")
+#: ``fusedmb`` and ``dw_se`` are the DESIGN §10 fusion windows: banning
+#: one removes that window from ``core/chain.plan``'s walk, degrading to
+#: the standalone composition (mb+pw / dw+se) exactly like fused3->fused2.
+BANNABLE = ("fused3", "fusedmb", "fused2", "dw_se", "unfused")
 
 
 def default_quarantine_path() -> str:

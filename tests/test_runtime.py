@@ -181,8 +181,19 @@ def test_ladder_rung_mapping(tmp_path):
     assert ladder.ban_for_failure(f3) == "fused3"
     assert ladder.ban_for_failure(pw) == "unfused"
     assert ladder.ban_for_failure(untagged, cp) == "fused3"
-    assert ladder.next_rung("fused3", {"fused3"}) == "fused2"
-    assert ladder.next_rung("fused2", {"fused3", "fused2"}) == "unfused"
+    # DESIGN §10 stage-algebra rungs map to themselves / unfused too
+    assert ladder.ban_for_failure(
+        failures.LoweringFailure("x", segment_kind="fusedmb")) == "fusedmb"
+    assert ladder.ban_for_failure(
+        failures.LoweringFailure("x", segment_kind="dw_se")) == "dw_se"
+    assert ladder.ban_for_failure(
+        failures.LoweringFailure("x", segment_kind="se")) == "unfused"
+    assert ladder.ban_for_failure(
+        failures.LoweringFailure("x", segment_kind="mb")) == "unfused"
+    assert ladder.next_rung("fused3", {"fused3"}) == "fusedmb"
+    assert ladder.next_rung("fusedmb", {"fusedmb"}) == "fused2"
+    assert ladder.next_rung("fused2", {"fused3", "fused2"}) == "dw_se"
+    assert ladder.next_rung("dw_se", {"dw_se"}) == "unfused"
     assert ladder.next_rung("unfused", {"unfused"}) == "ref"
 
 

@@ -1,0 +1,136 @@
+"""Benchmark-trajectory gate (benchmarks/trajectory.py, DESIGN.md §10).
+
+The gate's whole value is that it FAILS on regressions and stays quiet on
+the shipped baseline: every comparison rule gets a seeded positive (a
+mutated current run that must fail) and the clean self-compare negative,
+plus the acceptance check that the committed ``BENCH_baseline.json``
+passes against a fresh collection.
+"""
+import json
+
+import pytest
+
+from benchmarks import trajectory
+
+
+@pytest.fixture(scope="module")
+def snap():
+    """One small-resolution collection shared by every test (module-scoped:
+    collect() plans 4 networks; cheap but not free)."""
+    return trajectory.collect(resolutions=[56])
+
+
+def _copy(d):
+    return json.loads(json.dumps(d))
+
+
+def _some_row(data):
+    return next(iter(sorted(data["networks"])))
+
+
+def test_collect_schema(snap):
+    assert snap["schema"] == trajectory.SCHEMA_VERSION
+    assert len(snap["networks"]) == 4  # all benchmarked archs at res 56
+    for name, rec in snap["networks"].items():
+        assert set(rec) == {"traffic", "flags", "blocks"}
+        assert rec["traffic"]["mb_bf16"] < rec["traffic"]["mb_fp32"] \
+            < rec["traffic"]["mb_unfused"]
+        assert rec["flags"]["traffic_ok"] is True
+        assert all(set(b) == {"kinds", "passes", "segments"}
+                   for b in rec["blocks"])
+
+
+def test_self_compare_is_clean(snap):
+    failures, notes = trajectory.compare(snap, _copy(snap))
+    assert failures == [] and notes == []
+
+
+def test_traffic_regression_fails(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    cur["networks"][row]["traffic"]["mb_bf16"] *= 1.01
+    failures, _ = trajectory.compare(snap, cur)
+    assert any("mb_bf16 regressed" in f and row in f for f in failures)
+
+
+def test_traffic_improvement_is_a_note_not_a_failure(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    cur["networks"][row]["traffic"]["mb_fp32"] *= 0.9
+    failures, notes = trajectory.compare(snap, cur)
+    assert failures == []
+    assert any("mb_fp32 improved" in n for n in notes)
+
+
+def test_flag_drop_fails(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    assert snap["networks"][row]["flags"]["traffic_ok"] is True
+    cur["networks"][row]["flags"]["traffic_ok"] = False
+    failures, _ = trajectory.compare(snap, cur)
+    assert any("flag traffic_ok dropped" in f for f in failures)
+
+
+def test_added_pass_fails(snap):
+    """fused3 -> pw+fused2 style downgrade: pass count grows."""
+    cur = _copy(snap)
+    row = _some_row(cur)
+    blk = cur["networks"][row]["blocks"][0]
+    blk["passes"] += 1
+    failures, _ = trajectory.compare(snap, cur)
+    assert any("plan downgraded" in f and f"{row}/block0" in f
+               for f in failures)
+
+
+def test_segment_split_fails_even_at_equal_passes(snap):
+    """The fusedmb -> mb+pw trap: mb is an XLA pass so the kernel-pass
+    count can stay flat, but the segment split still fails the gate."""
+    cur = _copy(snap)
+    row = _some_row(cur)
+    blk = cur["networks"][row]["blocks"][0]
+    blk["segments"] += 1
+    blk["kinds"] = blk["kinds"] + "+mb"
+    failures, _ = trajectory.compare(snap, cur)
+    assert any("plan downgraded" in f for f in failures)
+
+
+def test_kind_change_no_worse_is_a_note(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    cur["networks"][row]["blocks"][0]["kinds"] = "something_else"
+    failures, notes = trajectory.compare(snap, cur)
+    assert failures == []
+    assert any("plan changed (no worse)" in n for n in notes)
+
+
+def test_missing_row_fails_new_row_notes(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    rec = cur["networks"].pop(row)
+    cur["networks"]["brand_new/res7"] = rec
+    failures, notes = trajectory.compare(snap, cur)
+    assert any("row missing" in f and row in f for f in failures)
+    assert any("brand_new/res7: new row" in n for n in notes)
+
+
+def test_block_count_change_fails(snap):
+    cur = _copy(snap)
+    row = _some_row(cur)
+    cur["networks"][row]["blocks"].pop()
+    failures, _ = trajectory.compare(snap, cur)
+    assert any("block count changed" in f for f in failures)
+
+
+def test_write_and_check_roundtrip(tmp_path, snap):
+    path = str(tmp_path / "baseline.json")
+    trajectory.write_baseline(path, baseline=snap)
+    assert trajectory.check_baseline(path, current=_copy(snap)) == 0
+    bad = _copy(snap)
+    bad["networks"][_some_row(bad)]["traffic"]["mb_unfused"] *= 2
+    assert trajectory.check_baseline(path, current=bad) == 1
+
+
+def test_shipped_baseline_matches_fresh_collection():
+    """The acceptance gate CI runs: the committed BENCH_baseline.json must
+    pass against a from-scratch collection at the full resolution set."""
+    assert trajectory.check_baseline() == 0
